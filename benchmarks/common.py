@@ -1,0 +1,74 @@
+"""Shared benchmark machinery: corpus/index caches, method runner, CSV."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core import build_index, twolevel
+from repro.core.metrics import evaluate_run, mean_and_p99
+from repro.core.traversal import retrieve_batched, retrieve_sequential
+from repro.data import make_corpus
+
+# benchmark-scale corpus (kept moderate: single CPU core)
+N_DOCS = 32768
+N_TERMS = 4096
+N_QUERIES = 32
+TILE = 512
+
+
+@functools.lru_cache(maxsize=8)
+def corpus(preset: str, seed: int = 0, n_docs: int = N_DOCS):
+    return make_corpus(preset, n_docs=n_docs, n_terms=N_TERMS,
+                       n_queries=N_QUERIES, seed=seed)
+
+
+@functools.lru_cache(maxsize=16)
+def index_for(preset: str, fill: str, seed: int = 0, tile: int = TILE,
+              n_docs: int = N_DOCS):
+    c = corpus(preset, seed, n_docs)
+    return build_index(c.merged(fill), tile_size=tile)
+
+
+def run_method(preset: str, fill: str, params, timed: bool = True,
+               seed: int = 0, mrr_cutoff: int = 10):
+    """Run one method config; returns metrics dict."""
+    c = corpus(preset, seed)
+    idx = index_for(preset, fill, seed)
+    if timed:
+        res = retrieve_sequential(idx, c.queries, c.q_weights_b,
+                                  c.q_weights_l, params)
+        mrt, p99 = mean_and_p99(res.latencies_ms)
+    else:
+        res = retrieve_batched(idx, c.queries, c.q_weights_b,
+                               c.q_weights_l, params)
+        mrt = p99 = float("nan")
+    m = evaluate_run(res.ids, c.qrels, params.k, mrr_cutoff)
+    st = res.stats
+    return {"mrr": m["mrr"], "recall": m["recall"], "ndcg": m["ndcg"],
+            "mrt_ms": mrt, "p99_ms": p99,
+            "tiles_visited": float(np.mean(st["tiles_visited"])),
+            "n_tiles": float(np.mean(st["n_tiles"])),
+            "docs_survived": float(np.mean(st["docs_survived"])),
+            "docs_present": float(np.mean(st["docs_present"])),
+            "docs_frozen": float(np.mean(st["docs_frozen"]))}
+
+
+METHODS = {
+    "org": lambda k: twolevel.original(k=k),
+    "gt": lambda k: twolevel.gt(k=k),
+    "gti": lambda k: twolevel.gti(k=k),
+    "2gti_acc": lambda k: twolevel.accurate(k=k),
+    "2gti_fast": lambda k: twolevel.fast(k=k),
+    "2gti_fast_impact": lambda k: twolevel.fast(k=k).replace(
+        schedule="impact"),
+    "linear": lambda k: twolevel.linear_combination(k=k),
+}
+
+
+def emit(name: str, mrt_ms: float, derived: dict) -> str:
+    """CSV row: name,us_per_call,derived (k=v;...)."""
+    dv = ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                  for k, v in derived.items())
+    us = mrt_ms * 1e3 if mrt_ms == mrt_ms else float("nan")
+    return f"{name},{us:.1f},{dv}"

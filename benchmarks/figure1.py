@@ -1,0 +1,18 @@
+"""Figure 1 analogue: recall@k and MRR@10 as retrieval depth k varies —
+the paper's headline phenomenon (GTI degrades as k shrinks; 2GTI tracks
+the original MaxScore)."""
+from __future__ import annotations
+
+from .common import METHODS, emit, run_method
+
+KS = (10, 20, 50, 100, 1000)
+
+
+def run(out) -> None:
+    for method, fill in (("org", "scaled"), ("gti", "zero"),
+                         ("2gti_acc", "scaled")):
+        for k in KS:
+            r = run_method("splade_like", fill, METHODS[method](k),
+                           timed=False)
+            out(emit(f"figure1/{method}/k{k}", float("nan"),
+                     {"recall_at_k": r["recall"], "mrr10": r["mrr"]}))

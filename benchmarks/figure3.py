@@ -1,0 +1,26 @@
+"""Figure 3 analogue: controlling BM25's influence on pruning — alpha sweep
+(beta=1), beta sweep (alpha=1), and threshold under-estimation on GTI
+(alpha=beta=1, F<1); latency/relevance tradeoff curves."""
+from __future__ import annotations
+
+from repro.core import twolevel
+
+from .common import emit, run_method
+
+
+def run(out) -> None:
+    for a in (1.0, 0.7, 0.4, 0.0):
+        p = twolevel.TwoLevelParams(alpha=a, beta=1.0, gamma=0.05, k=10)
+        r = run_method("splade_like", "scaled", p)
+        out(emit(f"figure3/alpha_sweep/a{a}", r["mrt_ms"],
+                 {"mrr": r["mrr"], "recall": r["recall"]}))
+    for b in (1.0, 0.6, 0.3, 0.0):
+        p = twolevel.TwoLevelParams(alpha=1.0, beta=b, gamma=0.05, k=10)
+        r = run_method("splade_like", "scaled", p)
+        out(emit(f"figure3/beta_sweep/b{b}", r["mrt_ms"],
+                 {"mrr": r["mrr"], "recall": r["recall"]}))
+    for f in (1.0, 0.9, 0.8, 0.7):
+        p = twolevel.gti(k=10).replace(threshold_factor=f)
+        r = run_method("splade_like", "scaled", p)
+        out(emit(f"figure3/underestimate/F{f}", r["mrt_ms"],
+                 {"mrr": r["mrr"], "recall": r["recall"]}))

@@ -1,0 +1,191 @@
+"""Roofline analysis from the dry-run artifacts (single-pod mesh).
+
+Per (arch x shape): three terms in seconds —
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16 peak)
+    memory     = HLO_bytes_per_device / 819 GB/s (HBM)
+    collective = sum(factor_k * bytes_k per device) / 50 GB/s (ICI link)
+      factors: all-reduce 2x (ring moves ~2x payload), others 1x.
+HLO flops/bytes use the loop-extrapolated values (XLA counts while bodies
+once; the dry-run compiles unrolled depth-1/2 probes to recover per-layer
+cost). MODEL_FLOPS is the analytic useful-work count (6*N*D train,
+2*N*tokens inference; MoE uses active params); the ratio flags
+remat/redundancy waste. Dominant term = the bottleneck the perf loop works
+on.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import get_arch
+from repro.configs.shapes import (GNN_SHAPE_DEFS, LM_SHAPE_DEFS,
+                                  RECSYS_SHAPE_DEFS)
+from repro.launch.steps import adapt_config
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s
+LINK_BW = 50e9            # B/s per ICI link
+CHIPS = 256               # single-pod roofline
+AR_FACTOR = 2.0
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def model_flops(arch_id: str, shape: str) -> float:
+    """Analytic useful FLOPs per step, GLOBAL (whole mesh)."""
+    arch = get_arch(arch_id)
+    cfg = adapt_config(arch, shape)
+    if arch.family == "lm":
+        d = LM_SHAPE_DEFS[shape]
+        n = cfg.active_param_count()
+        L, h, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        if d["kind"] == "train":
+            attn = 2.0 * d["batch"] * d["seq"] ** 2 * h * dh * L  # causal/2
+            return 6.0 * n * d["batch"] * d["seq"] + 3.0 * attn
+        if d["kind"] == "prefill":
+            attn = 2.0 * d["batch"] * d["seq"] ** 2 * h * dh * L
+            return 2.0 * n * d["batch"] * d["seq"] + attn
+        # decode: one token attends over the full cache
+        attn = 4.0 * d["batch"] * d["seq"] * h * dh * L
+        return 2.0 * n * d["batch"] + attn
+    if arch.family == "gnn":
+        dd = GNN_SHAPE_DEFS[shape]
+        h, r, i = cfg.d_hidden, cfg.n_rbf, cfg.n_interactions
+        if shape == "molecule":
+            nodes = dd["batch"] * dd["atoms"]
+            edges = dd["batch"] * dd["edges"]
+            mult = 6.0  # train (fwd+bwd)
+        else:
+            nodes, edges, mult = dd["nodes"], dd["edges"], 6.0
+        per = i * (edges * r * h + 3 * nodes * h * h) + nodes * h * h
+        embed = nodes * (cfg.d_feat or 1) * h
+        return mult * (per + embed) / 2.0 * 2.0  # MACs -> flops already 2x
+    # recsys
+    dd = RECSYS_SHAPE_DEFS[shape]
+    from repro.models import recsys as R
+    if isinstance(cfg, R.Bert4RecConfig):
+        tc = cfg.tf_config()
+        # matmul-active params only: embeddings are gathers here (sampled
+        # softmax), so exclude the table from the 6ND convention
+        n = tc.param_count() - tc.padded_vocab * tc.d_model \
+            - tc.max_position * tc.d_model
+        attn = 4.0 * cfg.seq_len ** 2 * cfg.n_heads \
+            * (cfg.embed_dim // cfg.n_heads) * cfg.n_blocks
+        per_seq = 2.0 * n * cfg.seq_len + attn
+        if dd["kind"] == "train":
+            return 3.0 * dd["batch"] * (per_seq
+                                        + 2.0 * cfg.seq_len * 512
+                                        * cfg.embed_dim)
+        if dd["kind"] == "serve":
+            return dd["batch"] * (per_seq + 2.0 * dd["shortlist"]
+                                  * cfg.embed_dim)
+        return per_seq + 2.0 * dd["n_cand"] * cfg.embed_dim
+    if isinstance(cfg, R.DLRMConfig):
+        mlp = sum(2 * i * o for i, o in zip(cfg.bot_mlp, cfg.bot_mlp[1:]))
+        n_int = cfg.n_sparse + 1
+        d_int = n_int * (n_int - 1) // 2 + cfg.embed_dim
+        dims = (d_int,) + cfg.top_mlp_hidden
+        mlp += sum(2 * i * o for i, o in zip(dims, dims[1:]))
+        inter = 2 * n_int * n_int * cfg.embed_dim
+        per_ex = mlp + inter
+        b = dd.get("n_cand", dd["batch"]) if dd["kind"] == "retrieval" \
+            else dd["batch"]
+        return (3.0 if dd["kind"] == "train" else 1.0) * per_ex * b
+    if isinstance(cfg, R.DINConfig):
+        d = cfg.embed_dim
+        att = (8 * d * cfg.attn_mlp[0]
+               + 2 * cfg.attn_mlp[0] * cfg.attn_mlp[1]) * cfg.seq_len
+        dims = (2 * d,) + cfg.mlp + (1,)
+        mlp = sum(2 * i * o for i, o in zip(dims, dims[1:]))
+        b = dd.get("n_cand", dd["batch"]) if dd["kind"] == "retrieval" \
+            else dd["batch"]
+        return (3.0 if dd["kind"] == "train" else 1.0) * (att + mlp) * b
+    if isinstance(cfg, R.TwoTowerConfig):
+        dims = (cfg.feat_dim,) + cfg.tower_mlp
+        tower = sum(2 * i * o for i, o in zip(dims, dims[1:]))
+        if dd["kind"] == "train":
+            b = dd["batch"]
+            return 3.0 * (2 * tower * b
+                          + 2 * b * (cfg.n_negatives + 1) * cfg.tower_mlp[-1])
+        if dd["kind"] == "serve":
+            return (tower * dd["batch"] + tower * dd["shortlist"]
+                    + 2 * dd["batch"] * dd["shortlist"] * cfg.tower_mlp[-1])
+        return tower + 2.0 * dd["n_cand"] * cfg.tower_mlp[-1]
+    raise TypeError(type(cfg))
+
+
+def analyze(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    ex = rec.get("extrapolated") or {}
+    flops = ex.get("flops", rec["flops"])
+    nbytes = ex.get("bytes_accessed", rec["bytes_accessed"])
+    coll = ex.get("collectives", rec["collectives"])
+    coll_bytes = sum((AR_FACTOR if k == "all-reduce" else 1.0)
+                     * v["bytes"] for k, v in coll.items())
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_n = coll_bytes / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_n), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"]) / rec["devices"]
+    mem = rec.get("memory", {})
+    resident = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0))
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dominant,
+            "hlo_flops_dev": flops, "model_flops_dev": mf,
+            "useful_ratio": mf / flops if flops > 0 else float("nan"),
+            "roofline_frac": max(t_c, t_m, t_n) and
+            t_c / max(t_c, t_m, t_n),
+            "hbm_gb": resident / 1e9,
+            "fits_16g": resident <= 16e9}
+
+
+def load_all(mesh: str = "pod16x16", variant: str | None = "tp"
+             ) -> list[dict]:
+    """variant 'tp' = baselines only; a name = that variant's artifacts;
+    None = everything (variant recorded per row)."""
+    rows = []
+    for p in sorted(ART.glob(f"{mesh}__*.json")):
+        rec = json.loads(p.read_text())
+        v = rec.get("variant", "tp")
+        if variant is not None and v != variant:
+            continue
+        r = analyze(rec)
+        if r:
+            r["variant"] = v
+            rows.append(r)
+    return rows
+
+
+def run(out) -> None:
+    rows = load_all(variant=None)
+    for r in rows:
+        suffix = "" if r["variant"] == "tp" else f"/{r['variant']}"
+        name = f"roofline/{r['arch']}/{r['shape']}{suffix}"
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out(f"{name},{total*1e6:.1f},"
+            f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+            f"collective_s={r['collective_s']:.4g};dom={r['dominant']};"
+            f"useful={r['useful_ratio']:.3f};hbm_gb={r['hbm_gb']:.2f};"
+            f"fits={r['fits_16g']}")
+
+
+def markdown_table(mesh: str = "pod16x16") -> str:
+    rows = load_all(mesh)
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful ratio | HBM GB | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_gb']:.2f} | {'Y' if r['fits_16g'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableX ...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = ("figure1", "table2", "table3", "table4", "figure3",
+           "table6_suite", "table7_bmw", "table8_qlen", "dense_transfer",
+           "bench_kernels",
+           "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    mods = args.only or MODULES
+    print("name,us_per_call,derived")
+
+    def out(line: str) -> None:
+        print(line, flush=True)
+
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(out)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,nan,error={type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 2 analogue: method comparison across three model-alignment regimes
+(SPLADE-like / uniCOIL-like / DeepImpact-like) at k=10 and k=1000.
+
+Per the paper's defaults: GT/GTI run on the zero-filled index, 2GTI on the
+scaled-filled index, org is guidance-free (fill irrelevant for ranking —
+uses scaled to share the cache). BM25-rank row = R_1.0 exhaustive."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.oracle import ranked_list
+from repro.core.metrics import evaluate_run
+
+from .common import METHODS, corpus, emit, run_method
+
+PRESETS = ("splade_like", "unicoil_like", "deepimpact_like")
+ROWS = [("org", "scaled"), ("gt", "zero"), ("gti", "zero"),
+        ("gti/s", "scaled"), ("2gti_acc", "scaled"), ("2gti_fast", "scaled")]
+
+
+def bm25_row(preset: str, k: int) -> dict:
+    c = corpus(preset)
+    merged = c.merged("zero")
+    ids = np.stack([ranked_list(merged, c.queries[q], c.q_weights_b[q],
+                                c.q_weights_l[q], 1.0, k)[0]
+                    for q in range(len(c.queries))])
+    return evaluate_run(ids, c.qrels, k)
+
+
+def run(out) -> None:
+    for preset in PRESETS:
+        for k in (10, 1000):
+            m = bm25_row(preset, k)
+            out(emit(f"table2/{preset}/bm25_rank/k{k}", float("nan"),
+                     {"mrr": m["mrr"], "recall": m["recall"]}))
+            for row, fill in ROWS:
+                method = row.split("/")[0]
+                r = run_method(preset, fill, METHODS[method](k))
+                out(emit(f"table2/{preset}/{row}/k{k}", r["mrt_ms"],
+                         {"mrr": r["mrr"], "recall": r["recall"],
+                          "p99_ms": r["p99_ms"],
+                          "tiles": r["tiles_visited"],
+                          "survived": r["docs_survived"]}))

@@ -1,0 +1,28 @@
+"""Table 6 analogue (BEIR zero-shot suite): a battery of six synthetic
+datasets (3 alignment regimes x 2 seeds) — methods are run with FIXED
+hyperparameters (no per-dataset tuning = the zero-shot condition)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import METHODS, emit, run_method
+
+SUITE = [(p, s) for p in ("splade_like", "unicoil_like", "deepimpact_like")
+         for s in (0, 1)]
+
+
+def run(out) -> None:
+    agg = {m: {"ndcg": [], "mrt": []} for m in ("org", "gti", "2gti_fast")}
+    for preset, seed in SUITE:
+        for method in agg:
+            fill = "zero" if method == "gti" else "scaled"
+            r = run_method(preset, fill, METHODS[method](10), seed=seed)
+            agg[method]["ndcg"].append(r["ndcg"])
+            agg[method]["mrt"].append(r["mrt_ms"])
+            out(emit(f"table6/{preset}_s{seed}/{method}", r["mrt_ms"],
+                     {"ndcg": r["ndcg"], "recall": r["recall"]}))
+    base = np.mean(agg["org"]["mrt"])
+    for method, v in agg.items():
+        out(emit(f"table6/average/{method}", float(np.mean(v["mrt"])),
+                 {"ndcg": float(np.mean(v["ndcg"])),
+                  "speedup_vs_org": base / np.mean(v["mrt"])}))

@@ -1,0 +1,21 @@
+"""Table 7 / Appendix B analogue: block-max (BMW-style) bounds vs list-level
+MaxScore bounds under 2GTI, across k — plus the beyond-paper impact-ordered
+schedule, the TPU-native traversal refinement."""
+from __future__ import annotations
+
+from repro.core import twolevel
+
+from .common import emit, run_method
+
+
+def run(out) -> None:
+    for k in (10, 20, 100):
+        for bound in ("list", "tile"):
+            for sched in ("docid", "impact"):
+                p = twolevel.fast(k=k).replace(bound_mode=bound,
+                                               schedule=sched)
+                r = run_method("unicoil_like", "scaled", p)
+                out(emit(f"table7/{bound}_{sched}/k{k}", r["mrt_ms"],
+                         {"mrr": r["mrr"], "recall": r["recall"],
+                          "tiles": r["tiles_visited"],
+                          "frozen": r["docs_frozen"]}))

@@ -1,0 +1,35 @@
+"""Table 8 analogue (Appendix B): performance by query-length class.
+
+The paper finds VBMW-2GTI preferable for short queries and
+MaxScore-2GTI for long ones, suggesting query routing. Our analogue
+compares list-level (MaxScore) vs tile-level (BMW-style) bounds across
+corpora with 3 / 6 / 9 / 12-term queries.
+"""
+from __future__ import annotations
+
+from repro.core import build_index, twolevel
+from repro.core.metrics import evaluate_run, mean_and_p99
+from repro.core.traversal import retrieve_sequential
+from repro.data import make_corpus
+
+from .common import emit
+
+
+def run(out) -> None:
+    for n_terms in (3, 6, 9, 12):
+        corpus = make_corpus("unicoil_like", n_docs=16384, n_terms=4096,
+                             n_queries=16, n_q_terms=n_terms, seed=5)
+        index = build_index(corpus.merged("scaled"), tile_size=512)
+        for bound in ("list", "tile"):
+            p = twolevel.fast(k=10).replace(bound_mode=bound,
+                                            schedule="impact")
+            res = retrieve_sequential(index, corpus.queries,
+                                      corpus.q_weights_b,
+                                      corpus.q_weights_l, p)
+            m = evaluate_run(res.ids, corpus.qrels, 10)
+            mrt, p99 = mean_and_p99(res.latencies_ms)
+            out(emit(f"table8/qlen{n_terms}/{bound}", mrt,
+                     {"mrr": m["mrr"], "recall": m["recall"],
+                      "p99_ms": p99,
+                      "tiles": float(res.stats["tiles_visited"].mean()),
+                      "frozen": float(res.stats["docs_frozen"].mean())}))

@@ -1,0 +1,53 @@
+"""2GTI transferred to dense retrieval (two-tower retrieval_cand path).
+
+A cheap low-dim prefix score plays BM25's role: two pruning levels with
+independent thresholds over blocked candidate scoring. Candidates are
+norm-clustered (the docid-reordering analogue) so block bounds are tight.
+
+    PYTHONPATH=src python examples/guided_dense_retrieval.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dense_guided import (build_dense_index, exhaustive_dense,
+                                     retrieve_dense)
+from repro.core.twolevel import TwoLevelParams
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n, d = 200_000, 128
+    # clustered catalogue: a few popularity lobes (realistic embeddings)
+    centers = rng.standard_normal((16, d)) * 2.0
+    assign = rng.integers(0, 16, n)
+    emb = centers[assign] + rng.standard_normal((n, d))
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    # cluster-sort = docid reordering: tightens block bounds
+    order = np.argsort(assign, kind="stable")
+    emb = jnp.asarray(emb[order], jnp.float32)
+    index = build_dense_index(emb, block_size=2048, d_cheap=32)
+
+    qs = rng.standard_normal((16, d)).astype(np.float32)
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+
+    configs = [("exhaustive (a=b=g)", TwoLevelParams(0.0, 0.0, 0.0, k=10)),
+               ("guided (a=1, b=0.3)", TwoLevelParams(1.0, 0.3, 0.0, k=10)),
+               ("guided (a=1, b=1)", TwoLevelParams(1.0, 1.0, 0.0, k=10))]
+    for name, p in configs:
+        t0, recall, scored = time.time(), 0.0, 0.0
+        for q in qs:
+            q = jnp.asarray(q)
+            vals, ids, st = retrieve_dense(index, q, p)
+            _, eids = exhaustive_dense(index, q, 10)
+            recall += len(set(ids.tolist()) & set(eids.tolist())) / 10
+            scored += st["candidates_fully_scored"] / index.emb.shape[0]
+        dt = (time.time() - t0) / len(qs) * 1e3
+        print(f"{name:22s} recall@10={recall/len(qs):.3f} "
+              f"fully-scored={scored/len(qs):6.1%}  {dt:6.1f} ms/q")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, no device allocation — consumed by
+``launch/dryrun.py`` (AOT lower+compile) and by the roofline bench.
+Each spec dict carries: kind ("train"/"prefill"/"decode"/"serve"/"retrieval"),
+inputs (pytree of ShapeDtypeStruct), and static metadata for the step
+factory. ``[audio]/[vlm]``-style frontends do not occur in this assignment;
+GNN large-graph cells take precomputed sampled-subgraph arrays from the
+neighbor sampler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SDS = jax.ShapeDtypeStruct
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# --------------------------------------------------------------------------
+# LM family
+# --------------------------------------------------------------------------
+
+LM_SHAPE_DEFS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def lm_input_specs(cfg, shape: str) -> dict:
+    d = LM_SHAPE_DEFS[shape]
+    b, s = d["batch"], d["seq"]
+    kind = d["kind"]
+    if kind == "train":
+        return {"kind": kind,
+                "inputs": {"batch": {
+                    "tokens": SDS((b, s), I32),
+                    "targets": SDS((b, s), I32)}}}
+    if kind == "prefill":
+        return {"kind": kind, "max_len": s,
+                "inputs": {"tokens": SDS((b, s), I32)}}
+    # decode: one new token against a seq-length KV cache
+    hkv, dh, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    kv_dtype = jnp.int8 if getattr(cfg, "kv_quant", False) \
+        else cfg.compute_dtype
+    cache = {"k": SDS((L, b, s, hkv, dh), kv_dtype),
+             "v": SDS((L, b, s, hkv, dh), kv_dtype)}
+    if getattr(cfg, "kv_quant", False):
+        cache["k_scale"] = SDS((L, b, s, hkv), F32)
+        cache["v_scale"] = SDS((L, b, s, hkv), F32)
+    return {"kind": "decode",
+            "inputs": {"token": SDS((b, 1), I32), "cache": cache,
+                       "cache_len": SDS((), I32)}}
+
+
+# --------------------------------------------------------------------------
+# GNN family (SchNet)
+# --------------------------------------------------------------------------
+
+GNN_SHAPE_DEFS = {
+    # (nodes, edges, d_feat, n_classes, replicate)
+    "full_graph_sm": dict(kind="gnn_full", nodes=2708, edges=10556,
+                          d_feat=1433, classes=7, pad=1),  # replicated
+    # Reddit-scale sampled training: 1024 seeds x fanout 15 -> x10
+    "minibatch_lg": dict(kind="gnn_sampled", nodes=169984, edges=168960,
+                         d_feat=602, classes=41, pad=512),
+    "ogb_products": dict(kind="gnn_full", nodes=2449029, edges=61859140,
+                         d_feat=100, classes=47, pad=512),
+    "molecule": dict(kind="gnn_mol", batch=128, atoms=30, edges=64),
+}
+
+
+def gnn_input_specs(cfg, shape: str) -> dict:
+    d = GNN_SHAPE_DEFS[shape]
+    if d["kind"] == "gnn_mol":
+        b, n, e = d["batch"], d["atoms"], d["edges"]
+        return {"kind": "gnn_mol",
+                "inputs": {"batch": {
+                    "z": SDS((b, n), I32), "pos": SDS((b, n, 3), F32),
+                    "edge_src": SDS((b, e), I32),
+                    "edge_dst": SDS((b, e), I32),
+                    "energy": SDS((b,), F32)}}}
+    nn, ee = _pad_to(d["nodes"], d["pad"]), _pad_to(d["edges"], d["pad"])
+    return {"kind": d["kind"], "classes": d["classes"], "d_feat": d["d_feat"],
+            "inputs": {"batch": {
+                "x": SDS((nn, d["d_feat"]), F32),
+                "edge_src": SDS((ee,), I32), "edge_dst": SDS((ee,), I32),
+                "edge_dist": SDS((ee,), F32),
+                "labels": SDS((nn,), I32),
+                "train_mask": SDS((nn,), F32)}}}
+
+
+# --------------------------------------------------------------------------
+# RecSys family
+# --------------------------------------------------------------------------
+
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512, shortlist=8192),
+    "serve_bulk": dict(kind="serve", batch=262144, shortlist=8192),
+    # 1M candidates padded to a 512 multiple so the candidate axis
+    # shards evenly over 256/512 devices (pad scores are masked).
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_000_448),
+}
+
+
+def recsys_input_specs(cfg, shape: str) -> dict:
+    from repro.models.recsys import (Bert4RecConfig, DINConfig, DLRMConfig,
+                                     TwoTowerConfig)
+    d = RECSYS_SHAPE_DEFS[shape]
+    b = d["batch"]
+    if isinstance(cfg, DLRMConfig):
+        feats = {"dense": SDS((b, cfg.n_dense), F32),
+                 "sparse": SDS((b, cfg.n_sparse, cfg.multi_hot), I32)}
+        if d["kind"] == "train":
+            return {"kind": "train",
+                    "inputs": {"batch": {**feats, "label": SDS((b,), I32)}}}
+        if d["kind"] == "serve":
+            return {"kind": "serve", "inputs": {"batch": feats}}
+        # retrieval: user context + 1M candidate ids for the varying field
+        user = {"dense": SDS((1, cfg.n_dense), F32),
+                "sparse": SDS((1, cfg.n_sparse - 1, cfg.multi_hot), I32)}
+        return {"kind": "retrieval",
+                "inputs": {"user": user,
+                           "cand_ids": SDS((d["n_cand"],), I32)}}
+    if isinstance(cfg, DINConfig):
+        if d["kind"] == "train":
+            return {"kind": "train", "inputs": {"batch": {
+                "hist": SDS((b, cfg.seq_len), I32),
+                "target": SDS((b,), I32), "label": SDS((b,), I32)}}}
+        if d["kind"] == "serve":
+            return {"kind": "serve", "inputs": {"batch": {
+                "hist": SDS((b, cfg.seq_len), I32),
+                "target": SDS((b,), I32)}}}
+        return {"kind": "retrieval",
+                "inputs": {"hist": SDS((1, cfg.seq_len), I32),
+                           "cand_ids": SDS((d["n_cand"],), I32)}}
+    if isinstance(cfg, TwoTowerConfig):
+        if d["kind"] == "train":
+            return {"kind": "train", "inputs": {"batch": {
+                "user_feats": SDS((b, cfg.user_bag), I32),
+                "pos_item": SDS((b,), I32),
+                "neg_items": SDS((cfg.n_negatives,), I32),
+                "neg_logq": SDS((cfg.n_negatives,), F32)}}}
+        if d["kind"] == "serve":
+            return {"kind": "serve", "inputs": {
+                "user_feats": SDS((b, cfg.user_bag), I32),
+                "shortlist": SDS((d["shortlist"],), I32)}}
+        # retrieval: 1 user vs 1M precomputed candidate tower outputs
+        return {"kind": "retrieval",
+                "inputs": {"user_feats": SDS((1, cfg.user_bag), I32),
+                           "cand_emb": SDS((d["n_cand"],
+                                            cfg.tower_mlp[-1]), F32)}}
+    if isinstance(cfg, Bert4RecConfig):
+        if d["kind"] == "train":
+            return {"kind": "train", "inputs": {"batch": {
+                "items": SDS((b, cfg.seq_len), I32),
+                "targets": SDS((b, cfg.seq_len), I32),
+                "mask": SDS((b, cfg.seq_len), I32),
+                "neg_items": SDS((512,), I32)}}}
+        if d["kind"] == "serve":
+            return {"kind": "serve", "inputs": {
+                "items": SDS((b, cfg.seq_len), I32),
+                "cand_ids": SDS((d["shortlist"],), I32)}}
+        return {"kind": "retrieval",
+                "inputs": {"items": SDS((1, cfg.seq_len), I32),
+                           "cand_ids": SDS((d["n_cand"],), I32)}}
+    raise TypeError(f"unknown recsys config {type(cfg)}")
+
+
+def input_specs(arch, shape: str, cfg=None) -> dict:
+    """Dispatch by family. ``arch``: ArchSpec; returns spec dict."""
+    cfg = cfg if cfg is not None else arch.config()
+    if arch.family == "lm":
+        return lm_input_specs(cfg, shape)
+    if arch.family == "gnn":
+        return gnn_input_specs(cfg, shape)
+    if arch.family == "recsys":
+        return recsys_input_specs(cfg, shape)
+    raise ValueError(arch.family)

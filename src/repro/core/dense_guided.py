@@ -1,0 +1,141 @@
+"""2GTI transferred to dense retrieval (two-tower ``retrieval_cand`` path).
+
+The paper's structure — a cheap model guides two levels of pruning with
+independent dynamic thresholds, while an expensive model ranks — maps onto
+blocked dense candidate scoring:
+
+- cheap model  = dot product over the first ``d_cheap`` dimensions
+  (principal subspace; plays BM25's role),
+- expensive model = full-dimension dot product (plays the learned model),
+- Global level = per-block upper bound of the alpha-combined score from
+  coordinate-wise block maxima/minima (block-max analogue) vs theta_Gl,
+- Local level  = per-candidate cheap score + residual-dim bound (beta
+  combination) vs theta_Lo; frozen candidates keep their partial
+  (gamma-combined) rank score, which still competes in Q_Rk,
+- blocks are visited in descending bound order (impact scheduling).
+
+alpha = beta = gamma recovers exact blocked top-k (rank-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .twolevel import TwoLevelParams
+
+NEG = jnp.float32(-jnp.inf)
+
+
+@dataclasses.dataclass
+class DenseGuidedIndex:
+    emb: jax.Array          # [N, D] rotated candidate embeddings
+    block_size: int
+    d_cheap: int
+    n_blocks: int
+    bmax: jax.Array         # [n_blocks, D] coordinate-wise block max
+    bmin: jax.Array         # [n_blocks, D] coordinate-wise block min
+    rotation: jax.Array     # [D, D] PCA basis (queries must be rotated too)
+
+    def rotate_query(self, q: jax.Array) -> jax.Array:
+        return q @ self.rotation
+
+
+def build_dense_index(emb: jax.Array, block_size: int = 4096,
+                      d_cheap: int = 32) -> DenseGuidedIndex:
+    """PCA-rotate so the leading ``d_cheap`` dims carry the most energy —
+    the dense analogue of the paper's index *alignment*: the cheap model
+    must correlate with the expensive one for its guidance to be safe.
+    Dot products are rotation-invariant, so exact scores are unchanged."""
+    n, d = emb.shape
+    cov = (emb.T @ emb) / n
+    _, vecs = jnp.linalg.eigh(cov)           # ascending eigenvalues
+    rot = vecs[:, ::-1]                       # descending: PCA basis
+    emb = emb @ rot
+    pad = (-n) % block_size
+    if pad:
+        emb = jnp.concatenate(
+            [emb, jnp.zeros((pad, d), emb.dtype)], axis=0)
+    nb = emb.shape[0] // block_size
+    blocks = emb.reshape(nb, block_size, d)
+    return DenseGuidedIndex(emb=emb, block_size=block_size, d_cheap=d_cheap,
+                            n_blocks=nb, bmax=blocks.max(1),
+                            bmin=blocks.min(1), rotation=rot)
+
+
+def _bound(q, bmax, bmin):
+    """Upper bound of q . x over a block, coordinate-wise."""
+    return jnp.sum(jnp.maximum(q * bmax, q * bmin), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "block_size", "d_cheap", "n_blocks"))
+def _retrieve(emb, bmax, bmin, q, alpha, beta, gamma,
+              *, k, block_size, d_cheap, n_blocks):
+    d = emb.shape[1]
+    qc = q.at[d_cheap:].set(0.0)
+    qr = q.at[:d_cheap].set(0.0)
+    ub_cheap = _bound(qc, bmax, bmin)          # [nb] cheap-score bound
+    ub_rest = _bound(qr, bmax, bmin)           # [nb] residual bound
+    ub_full = ub_cheap + ub_rest
+    ub_alpha = alpha * ub_cheap + (1 - alpha) * ub_full
+    order = jnp.argsort(-ub_alpha).astype(jnp.int32)
+
+    def step(carry, bi):
+        (gv, gi, lv, li, rv, ri, scored) = carry
+        th_gl, th_lo = gv[-1], lv[-1]
+        skip = ub_alpha[bi] <= th_gl
+        rows = jax.lax.dynamic_slice_in_dim(emb, bi * block_size, block_size)
+        s_cheap = rows @ qc                    # [B] cheap scores
+        # local level: freeze candidates whose beta-combined bound fails
+        local_bound = (beta * s_cheap
+                       + (1 - beta) * (s_cheap + ub_rest[bi]))
+        alive = local_bound > th_lo
+        s_rest = jnp.where(alive, rows @ qr, 0.0)
+        s_full = s_cheap + s_rest
+        g = alpha * s_cheap + (1 - alpha) * s_full
+        l = beta * s_cheap + (1 - beta) * s_full
+        r = gamma * s_cheap + (1 - gamma) * s_full   # partial if frozen
+        ids = bi * block_size + jnp.arange(block_size, dtype=jnp.int32)
+
+        def merge(qv, qi, vals, mask):
+            vals = jnp.where(mask & ~skip, vals, NEG)
+            nv = jnp.concatenate([qv, vals])
+            ni = jnp.concatenate([qi, ids])
+            tv, idx = jax.lax.top_k(nv, k)
+            return tv, ni[idx]
+
+        gv, gi = merge(gv, gi, g, alive)
+        lv, li = merge(lv, li, l, alive)
+        rv, ri = merge(rv, ri, r, jnp.ones_like(alive))
+        scored = scored + jnp.where(skip, 0.0, alive.sum().astype(jnp.float32))
+        return (gv, gi, lv, li, rv, ri, scored), None
+
+    init = (jnp.full(k, NEG), jnp.full(k, -1, jnp.int32),
+            jnp.full(k, NEG), jnp.full(k, -1, jnp.int32),
+            jnp.full(k, NEG), jnp.full(k, -1, jnp.int32),
+            jnp.float32(0.0))
+    (gv, gi, lv, li, rv, ri, scored), _ = jax.lax.scan(step, init, order)
+    return rv, ri, scored
+
+
+def retrieve_dense(index: DenseGuidedIndex, q: jax.Array,
+                   params: TwoLevelParams):
+    """Top-k candidates for one query. Returns (scores, ids, stats)."""
+    q = index.rotate_query(q.astype(index.emb.dtype))
+    rv, ri, scored = _retrieve(
+        index.emb, index.bmax, index.bmin, q,
+        jnp.float32(params.alpha), jnp.float32(params.beta),
+        jnp.float32(params.gamma), k=params.k, block_size=index.block_size,
+        d_cheap=index.d_cheap, n_blocks=index.n_blocks)
+    stats = {"candidates_fully_scored": float(scored),
+             "n_candidates": index.emb.shape[0]}
+    return np.asarray(rv), np.asarray(ri), stats
+
+
+def exhaustive_dense(index: DenseGuidedIndex, q: jax.Array, k: int):
+    s = index.emb @ index.rotate_query(q.astype(index.emb.dtype))
+    vals, ids = jax.lax.top_k(s, k)
+    return np.asarray(vals), np.asarray(ids)

@@ -1,0 +1,160 @@
+"""Blocked Impact Index (BII): the TPU-native layout of a merged index.
+
+The docid space is partitioned into tiles of ``tile_size`` documents. For
+each (term, tile) we store a CSR pointer into the term's posting run for that
+tile, plus tile-granular maxima of both weights (the block-max analogue).
+All query-time gathers are static-shaped: a term's postings inside one tile
+are fetched as a ``pad_len``-wide padded slice.
+
+Arrays live as jnp devices arrays; the build is numpy host-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .align import MergedPostings
+
+INVALID_DOC = np.int32(2**31 - 1)
+
+
+@dataclasses.dataclass
+class BlockedImpactIndex:
+    n_docs: int
+    n_terms: int
+    tile_size: int
+    n_tiles: int
+    pad_len: int          # max postings of one term inside one tile (padded)
+    # flat postings (term-major, docid-sorted within term)
+    docids: jax.Array     # [nnz] int32
+    w_b: jax.Array        # [nnz] f32
+    w_l: jax.Array        # [nnz] f32
+    # per-(term, tile) structure
+    tile_ptr: jax.Array   # [n_terms, n_tiles + 1] int32 (offsets into flat arrays)
+    tile_max_b: jax.Array # [n_terms, n_tiles] f32
+    tile_max_l: jax.Array # [n_terms, n_tiles] f32
+    # list-level maxima
+    sigma_b: jax.Array    # [n_terms] f32
+    sigma_l: jax.Array    # [n_terms] f32
+    # docid remapping (identity unless the index was built with doc_order):
+    # orig_of_new[new_id] = original docid, or None for identity.
+    orig_of_new: np.ndarray | None = None
+
+    @property
+    def nnz(self) -> int:
+        return int(self.docids.shape[0])
+
+    def to_orig(self, ids: np.ndarray) -> np.ndarray:
+        """Map internal docids back to original ids (-1 passes through)."""
+        ids = np.asarray(ids)
+        if self.orig_of_new is None:
+            return ids
+        safe = np.clip(ids, 0, self.n_docs - 1)
+        return np.where(ids < 0, ids, self.orig_of_new[safe]).astype(ids.dtype)
+
+
+def impact_doc_order(merged: MergedPostings) -> np.ndarray:
+    """Docid reordering by descending total learned mass.
+
+    Clusters high-impact documents into few tiles so tile maxima become
+    discriminative — the tile-granular analogue of the docid-reassignment
+    (BP reordering) used with block-max indexes in PISA. Returns ``order``
+    such that new docid ``i`` is original doc ``order[i]``.
+    """
+    mass = np.zeros(merged.n_docs, dtype=np.float64)
+    np.add.at(mass, merged.docids, merged.w_l.astype(np.float64))
+    return np.argsort(-mass, kind="stable").astype(np.int32)
+
+
+def build_index(merged: MergedPostings, tile_size: int = 2048,
+                pad_multiple: int = 8, pad_cap: int | None = None,
+                doc_order: np.ndarray | None = None) -> BlockedImpactIndex:
+    """Build the BII from merged postings (host-side numpy).
+
+    ``doc_order`` (optional): permutation; new docid i <- original
+    doc_order[i]. Results are mapped back via ``index.to_orig``.
+    """
+    n_docs, n_terms = merged.n_docs, merged.n_terms
+    n_tiles = -(-n_docs // tile_size)
+    indptr = merged.indptr
+    docids = merged.docids
+    w_b_arr, w_l_arr = merged.w_b, merged.w_l
+    orig_of_new = None
+    if doc_order is not None:
+        orig_of_new = np.asarray(doc_order, dtype=np.int32)
+        new_of_orig = np.empty(n_docs, dtype=np.int32)
+        new_of_orig[orig_of_new] = np.arange(n_docs, dtype=np.int32)
+        docids = new_of_orig[docids]
+        # re-sort each term's postings by the new docid
+        term_of = np.repeat(np.arange(n_terms, dtype=np.int64),
+                            np.diff(indptr))
+        order = np.lexsort((docids, term_of))
+        docids = docids[order]
+        w_b_arr = w_b_arr[order]
+        w_l_arr = w_l_arr[order]
+
+    # tile_ptr[t, tau] = global offset of first posting of term t with
+    # docid >= tau * tile_size. searchsorted per term, vectorized over tiles.
+    tile_ptr = np.zeros((n_terms, n_tiles + 1), dtype=np.int32)
+    bounds = np.arange(n_tiles + 1, dtype=np.int64) * tile_size
+    tile_of = (docids.astype(np.int64) // tile_size)
+    term_of = np.repeat(np.arange(n_terms, dtype=np.int64), np.diff(indptr))
+    # counts[t, tau] = postings of term t in tile tau
+    flat = term_of * n_tiles + tile_of
+    cnt = np.bincount(flat, minlength=n_terms * n_tiles).reshape(n_terms, n_tiles)
+    tile_ptr[:, 1:] = np.cumsum(cnt, axis=1, dtype=np.int64).astype(np.int32)
+    tile_ptr += indptr[:n_terms, None].astype(np.int32)
+    del bounds
+
+    # per-(term, tile) maxima via max-scatter
+    tm_b = np.zeros((n_terms, n_tiles), dtype=np.float32)
+    tm_l = np.zeros((n_terms, n_tiles), dtype=np.float32)
+    np.maximum.at(tm_b.reshape(-1), flat, w_b_arr)
+    np.maximum.at(tm_l.reshape(-1), flat, w_l_arr)
+
+    run_max = int(cnt.max()) if cnt.size else 0
+    pad_len = max(pad_multiple, -(-run_max // pad_multiple) * pad_multiple)
+    if pad_cap is not None:
+        pad_len = min(pad_len, pad_cap)
+        if run_max > pad_len:
+            raise ValueError(f"pad_cap {pad_cap} < max run {run_max}")
+
+    sigma_b = np.zeros(n_terms, dtype=np.float32)
+    sigma_l = np.zeros(n_terms, dtype=np.float32)
+    np.maximum.at(sigma_b, term_of, w_b_arr)
+    np.maximum.at(sigma_l, term_of, w_l_arr)
+
+    return BlockedImpactIndex(
+        n_docs=n_docs, n_terms=n_terms, tile_size=tile_size, n_tiles=n_tiles,
+        pad_len=pad_len,
+        docids=jnp.asarray(docids, dtype=jnp.int32),
+        w_b=jnp.asarray(w_b_arr), w_l=jnp.asarray(w_l_arr),
+        tile_ptr=jnp.asarray(tile_ptr),
+        tile_max_b=jnp.asarray(tm_b), tile_max_l=jnp.asarray(tm_l),
+        sigma_b=jnp.asarray(sigma_b), sigma_l=jnp.asarray(sigma_l),
+        orig_of_new=orig_of_new)
+
+
+@partial(jax.jit, static_argnames=("pad_len", "tile_size"))
+def gather_tile(docids: jax.Array, w_b: jax.Array, w_l: jax.Array,
+                tile_ptr: jax.Array, q_terms: jax.Array, tile: jax.Array,
+                *, pad_len: int, tile_size: int):
+    """Fetch padded posting runs of query terms inside one tile.
+
+    Returns (offs [Nq, P] int32 local doc offsets, -1 where padded;
+             wb, wl [Nq, P] f32 zero-padded).
+    """
+    start = tile_ptr[q_terms, tile]            # [Nq]
+    cnt = tile_ptr[q_terms, tile + 1] - start  # [Nq]
+    idx = start[:, None] + jnp.arange(pad_len, dtype=jnp.int32)[None, :]
+    mask = jnp.arange(pad_len, dtype=jnp.int32)[None, :] < cnt[:, None]
+    idx = jnp.where(mask, idx, 0)
+    d = jnp.take(docids, idx, mode="clip")
+    offs = jnp.where(mask, d - tile * tile_size, -1).astype(jnp.int32)
+    wb = jnp.where(mask, jnp.take(w_b, idx, mode="clip"), 0.0)
+    wl = jnp.where(mask, jnp.take(w_l, idx, mode="clip"), 0.0)
+    return offs, wb, wl

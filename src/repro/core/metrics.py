@@ -1,0 +1,50 @@
+"""Relevance metrics used in the paper: MRR@k, recall@k, nDCG@10."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mrr_at_k(ranked_ids: np.ndarray, relevant: set[int], k: int = 10) -> float:
+    for rank, d in enumerate(ranked_ids[:k], start=1):
+        if int(d) in relevant:
+            return 1.0 / rank
+    return 0.0
+
+
+def recall_at_k(ranked_ids: np.ndarray, relevant: set[int], k: int) -> float:
+    if not relevant:
+        return 0.0
+    hits = sum(1 for d in ranked_ids[:k] if int(d) in relevant)
+    return hits / len(relevant)
+
+
+def ndcg_at_k(ranked_ids: np.ndarray, gains: dict[int, float], k: int = 10
+              ) -> float:
+    """nDCG@k with graded gains (binary dict -> standard nDCG)."""
+    dcg = 0.0
+    for rank, d in enumerate(ranked_ids[:k], start=1):
+        g = gains.get(int(d), 0.0)
+        if g:
+            dcg += (2.0 ** g - 1.0) / np.log2(rank + 1)
+    ideal = sorted(gains.values(), reverse=True)[:k]
+    idcg = sum((2.0 ** g - 1.0) / np.log2(r + 1)
+               for r, g in enumerate(ideal, start=1))
+    return dcg / idcg if idcg > 0 else 0.0
+
+
+def mean_and_p99(latencies_ms: np.ndarray) -> tuple[float, float]:
+    """MRT and tail latency as reported in the paper's tables."""
+    lat = np.asarray(latencies_ms, dtype=np.float64)
+    return float(lat.mean()), float(np.percentile(lat, 99))
+
+
+def evaluate_run(ids: np.ndarray, qrels: list[set[int]], k: int,
+                 mrr_cutoff: int = 10) -> dict:
+    """Aggregate MRR@cutoff / recall@k / nDCG@10 over a query batch."""
+    mrr, rec, ndcg = [], [], []
+    for row, rel in zip(ids, qrels):
+        mrr.append(mrr_at_k(row, rel, mrr_cutoff))
+        rec.append(recall_at_k(row, rel, k))
+        ndcg.append(ndcg_at_k(row, {d: 1.0 for d in rel}, 10))
+    return {"mrr": float(np.mean(mrr)), "recall": float(np.mean(rec)),
+            "ndcg": float(np.mean(ndcg))}

@@ -1,0 +1,401 @@
+"""Two-level guided tile-scan traversal — the paper's algorithm, TPU-native.
+
+The docid space is scanned tile-by-tile in docid order (``lax.scan``),
+carrying three top-k queues whose thresholds tighten monotonically — the
+DAAT threshold dynamic at tile granularity. Per tile:
+
+  1. *Tile skip* (global level): sum of alpha-combined per-(term,tile) maxima
+     <= theta_Gl  =>  no doc in the tile can qualify; skip.
+  2. *Term partitioning* (global level): terms presorted ascending by
+     alpha-combined list maxima; the prefix whose bound sum stays <= theta_Gl
+     is non-essential. Docs with no essential-term posting are pruned and
+     enter no queue.
+  3. *Local level*: surviving docs accumulate weights term-by-term in
+     descending order. Before each non-essential term, docs whose
+     beta-partial + beta-combined remaining bound <= theta_Lo freeze: they
+     stop accumulating but keep their partial gamma-combined RankScore,
+     which still enters Q_Rk (paper queue discipline).
+  4. Tile-local top-k of Global/Local/Rank merge into the carried queues.
+
+Two modes share this tile scorer:
+  - ``retrieve_batched``: vmap over queries x lax.scan over tiles (TPU path;
+    skips are masked compute, turned into real skips by the Pallas kernel).
+  - ``retrieve_sequential``: host loop with *physical* tile skipping, timing
+    each query — the paper's single-threaded latency regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import BlockedImpactIndex
+from .twolevel import TwoLevelParams
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    ids: np.ndarray        # [B, k] int32 (Q_Rk docids, score-desc)
+    scores: np.ndarray     # [B, k] float32 (RankScore)
+    global_ids: np.ndarray
+    local_ids: np.ndarray
+    stats: dict            # per-query counters
+    latencies_ms: np.ndarray | None = None  # sequential mode only
+
+
+def _combine(coef, b, l):
+    return coef * b + (1.0 - coef) * l
+
+
+def _merge_queue(q_vals, q_ids, c_vals, c_ids, k: int):
+    """Merge tile candidates into a sorted top-k queue (stable ties)."""
+    vals = jnp.concatenate([q_vals, c_vals])
+    ids = jnp.concatenate([q_ids, c_ids])
+    top_vals, idx = jax.lax.top_k(vals, k)
+    return top_vals, ids[idx]
+
+
+def score_tile(offs, wb, wl, m_alpha, m_beta, th_gl, th_lo,
+               alpha, beta, gamma, *, tile_size: int, kq: int):
+    """Score one tile for one query. See module docstring for the levels.
+
+    offs:    [Nq, P] int32 local doc offsets (-1 = padding)
+    wb, wl:  [Nq, P] f32 query-weighted posting weights (0 = padding)
+    m_alpha: [Nq] f32 alpha-combined per-term bound maxima (sorted order)
+    m_beta:  [Nq] f32 beta-combined per-term bound maxima (same order)
+    Returns three (vals, local_idx) candidate sets + stat counters.
+    """
+    nq = offs.shape[0]
+    S = tile_size
+    valid = offs >= 0
+    offs_safe = jnp.where(valid, offs, S).astype(jnp.int32)
+
+    # Dense per-term rows: one scatter for all terms at once.
+    seg = (jnp.arange(nq, dtype=jnp.int32)[:, None] * (S + 1) + offs_safe).ravel()
+    dense_b = jax.ops.segment_sum(wb.ravel(), seg, num_segments=nq * (S + 1)
+                                  ).reshape(nq, S + 1)[:, :S]
+    dense_l = jax.ops.segment_sum(wl.ravel(), seg, num_segments=nq * (S + 1)
+                                  ).reshape(nq, S + 1)[:, :S]
+    cnt = jax.ops.segment_sum(valid.ravel().astype(jnp.float32), seg,
+                              num_segments=nq * (S + 1)).reshape(nq, S + 1)[:, :S]
+
+    # Global level: essential = suffix whose prefix-incl bound exceeds theta.
+    prefix_alpha = jnp.cumsum(m_alpha)
+    essential = prefix_alpha > th_gl                       # [Nq] bool
+    present = cnt.sum(0) > 0                               # [S]
+    ess_cnt = jnp.einsum("t,ts->s", essential.astype(jnp.float32), cnt)
+    survive = ess_cnt > 0                                  # [S]
+
+    # Local level: descending accumulate with freeze checks.
+    prefix_beta = jnp.cumsum(m_beta)                       # includes term i
+
+    def body(j, state):
+        i = nq - 1 - j
+        sb, sl, alive = state
+        l_part = _combine(beta, sb, sl)
+        ok = essential[i] | (l_part + prefix_beta[i] > th_lo)
+        alive = alive & ok
+        gate = (survive & alive).astype(sb.dtype)
+        sb = sb + gate * dense_b[i]
+        sl = sl + gate * dense_l[i]
+        return sb, sl, alive
+
+    sb0 = jnp.zeros(S, dtype=jnp.float32)
+    alive0 = jnp.ones(S, dtype=bool)
+    sb, sl, alive = jax.lax.fori_loop(0, nq, body, (sb0, sb0, alive0))
+
+    g = _combine(alpha, sb, sl)
+    l = _combine(beta, sb, sl)
+    r = _combine(gamma, sb, sl)
+    eval_mask = survive & alive
+    rank_mask = survive
+
+    def tile_topk(scores, mask):
+        vals, idx = jax.lax.top_k(jnp.where(mask, scores, NEG_INF), kq)
+        return vals, idx.astype(jnp.int32)
+
+    g_c = tile_topk(g, eval_mask)
+    l_c = tile_topk(l, eval_mask)
+    r_c = tile_topk(r, rank_mask)
+    stats = jnp.stack([present.sum().astype(jnp.float32),
+                       survive.sum().astype(jnp.float32),
+                       (survive & ~alive).sum().astype(jnp.float32),
+                       valid.sum().astype(jnp.float32)])
+    return g_c, l_c, r_c, stats
+
+
+def _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl, tile,
+                 *, pad_len: int, tile_size: int):
+    start = tile_ptr[qt, tile]
+    cnt = tile_ptr[qt, tile + 1] - start
+    lane = jnp.arange(pad_len, dtype=jnp.int32)[None, :]
+    idx = start[:, None] + lane
+    mask = lane < cnt[:, None]
+    idx = jnp.where(mask, idx, 0)
+    d = jnp.take(docids, idx, mode="clip")
+    offs = jnp.where(mask, d - tile * tile_size, -1).astype(jnp.int32)
+    wb = jnp.where(mask, jnp.take(w_b, idx, mode="clip"), 0.0) * qwb[:, None]
+    wl = jnp.where(mask, jnp.take(w_l, idx, mode="clip"), 0.0) * qwl[:, None]
+    return offs, wb, wl
+
+
+def _sort_query(qt, qwb, qwl, sigma_b, sigma_l, alpha):
+    """Presort query terms ascending by alpha-combined list maxima."""
+    sig_b = qwb * sigma_b[qt]
+    sig_l = qwl * sigma_l[qt]
+    order = jnp.argsort(_combine(alpha, sig_b, sig_l))
+    return (qt[order], qwb[order], qwl[order], sig_b[order], sig_l[order])
+
+
+def _score_tile_kernel(offs, wb, wl, m_alpha, m_beta, th_gl, th_lo,
+                       alpha, beta, gamma, *, tile_size: int, kq: int):
+    """Pallas guided_score kernel path (interpret mode on CPU): same
+    contract as ``score_tile``; the fused kernel returns G/L/R + masks."""
+    from ..kernels.guided_score import guided_score_tile
+    essential = (jnp.cumsum(m_alpha) > th_gl).astype(jnp.float32)
+    prefix_beta = jnp.cumsum(m_beta)
+    out = guided_score_tile(offs, wb, wl, essential, prefix_beta,
+                            th_gl, th_lo, alpha, beta, gamma,
+                            tile_size=tile_size,
+                            block_s=min(512, tile_size))
+    g, l, r, eval_m, rank_m = out
+    eval_mask = eval_m > 0
+    rank_mask = rank_m > 0
+
+    def tile_topk(scores, mask):
+        vals, idx = jax.lax.top_k(jnp.where(mask, scores, NEG_INF), kq)
+        return vals, idx.astype(jnp.int32)
+
+    valid = offs >= 0
+    stats = jnp.stack([rank_m.sum(),                      # ~present (>=)
+                       rank_m.sum(),
+                       (rank_mask & ~eval_mask).sum().astype(jnp.float32),
+                       valid.sum().astype(jnp.float32)])
+    return (tile_topk(g, eval_mask), tile_topk(l, eval_mask),
+            tile_topk(r, rank_mask), stats)
+
+
+def _tile_step(idx_arrays, qt, qwb, qwl, sig_b, sig_l, carry, tile,
+               alpha, beta, gamma, factor,
+               *, k, kq, pad_len, tile_size, bound_mode, use_kernel=False):
+    """One tile visit: gather -> skip test -> score -> queue merge."""
+    docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l = idx_arrays
+    (gv, gi, lv, li, rv, ri, st) = carry
+    th_gl = gv[-1] * factor
+    th_lo = lv[-1] * factor
+
+    tm_b = qwb * tile_max_b[qt, tile]
+    tm_l = qwl * tile_max_l[qt, tile]
+    ub_gl = _combine(alpha, tm_b, tm_l).sum()
+    skip = ub_gl <= th_gl
+
+    if bound_mode == "tile":
+        m_alpha = _combine(alpha, tm_b, tm_l)
+        m_beta = _combine(beta, tm_b, tm_l)
+    else:
+        m_alpha = _combine(alpha, sig_b, sig_l)
+        m_beta = _combine(beta, sig_b, sig_l)
+
+    offs, wb, wl = _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl,
+                                tile, pad_len=pad_len, tile_size=tile_size)
+    scorer = _score_tile_kernel if use_kernel else score_tile
+    g_c, l_c, r_c, stats = scorer(
+        offs, wb, wl, m_alpha, m_beta, th_gl, th_lo, alpha, beta, gamma,
+        tile_size=tile_size, kq=kq)
+
+    base = tile * tile_size
+
+    def masked(c):
+        vals, idx = c
+        vals = jnp.where(skip, NEG_INF, vals)
+        return vals, base + idx
+
+    gv, gi = _merge_queue(gv, gi, *masked(g_c), k)
+    lv, li = _merge_queue(lv, li, *masked(l_c), k)
+    rv, ri = _merge_queue(rv, ri, *masked(r_c), k)
+    visited = jnp.where(skip, 0.0, 1.0)
+    st = st + jnp.concatenate([jnp.where(skip, 0.0, stats), visited[None]])
+    return (gv, gi, lv, li, rv, ri, st)
+
+
+def _init_carry(k):
+    vals = jnp.full(k, NEG_INF, dtype=jnp.float32)
+    ids = jnp.full(k, -1, dtype=jnp.int32)
+    return (vals, ids, vals, ids, vals, ids, jnp.zeros(5, dtype=jnp.float32))
+
+
+def _tile_upper_bounds(tile_max_b, tile_max_l, qt, qwb, qwl, alpha):
+    """Per-tile alpha-combined global upper bounds: [n_tiles]."""
+    tm_b = qwb[:, None] * tile_max_b[qt, :]
+    tm_l = qwl[:, None] * tile_max_l[qt, :]
+    return _combine(alpha, tm_b, tm_l).sum(0)
+
+
+@partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
+                                   "n_tiles", "bound_mode", "schedule",
+                                   "use_kernel"))
+def _retrieve_batched_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
+                           sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                           alpha, beta, gamma, factor,
+                           *, k, kq, pad_len, tile_size, n_tiles, bound_mode,
+                           schedule, use_kernel=False):
+    idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
+
+    def one_query(qt, qwb, qwl):
+        qt, qwb, qwl, sig_b, sig_l = _sort_query(qt, qwb, qwl,
+                                                 sigma_b, sigma_l, alpha)
+        if schedule == "impact":
+            ub = _tile_upper_bounds(tile_max_b, tile_max_l, qt, qwb, qwl,
+                                    alpha)
+            tiles = jnp.argsort(-ub).astype(jnp.int32)
+        else:
+            tiles = jnp.arange(n_tiles, dtype=jnp.int32)
+
+        def step(carry, tile):
+            carry = _tile_step(idx_arrays, qt, qwb, qwl, sig_b, sig_l, carry,
+                               tile, alpha, beta, gamma, factor,
+                               k=k, kq=kq, pad_len=pad_len,
+                               tile_size=tile_size, bound_mode=bound_mode,
+                               use_kernel=use_kernel)
+            return carry, None
+
+        carry, _ = jax.lax.scan(step, _init_carry(k), tiles)
+        return carry
+
+    return jax.vmap(one_query)(q_terms, qw_b, qw_l)
+
+
+def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
+                     params: TwoLevelParams,
+                     use_kernel: bool = False) -> RetrievalResult:
+    """Batched retrieval: q_terms [B, Nq] int32 (pad with qw = 0).
+
+    ``use_kernel=True`` routes tile scoring through the fused Pallas
+    guided_score kernel (interpret mode on CPU; native on TPU)."""
+    q_terms = jnp.asarray(q_terms, dtype=jnp.int32)
+    qw_b = jnp.asarray(qw_b, dtype=jnp.float32)
+    qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
+    kq = min(params.k, index.tile_size)
+    out = _retrieve_batched_impl(
+        index.docids, index.w_b, index.w_l, index.tile_ptr,
+        index.tile_max_b, index.tile_max_l, index.sigma_b, index.sigma_l,
+        q_terms, qw_b, qw_l,
+        jnp.float32(params.alpha), jnp.float32(params.beta),
+        jnp.float32(params.gamma), jnp.float32(params.threshold_factor),
+        k=params.k, kq=kq, pad_len=index.pad_len, tile_size=index.tile_size,
+        n_tiles=index.n_tiles, bound_mode=params.bound_mode,
+        schedule=params.schedule, use_kernel=use_kernel)
+    gv, gi, lv, li, rv, ri, st = jax.tree_util.tree_map(np.asarray, out)
+    stats = dict(zip(("docs_present", "docs_survived", "docs_frozen",
+                      "postings_touched", "tiles_visited"), st.T))
+    stats["n_tiles"] = np.full(q_terms.shape[0], index.n_tiles, np.float32)
+    return RetrievalResult(ids=index.to_orig(ri), scores=rv,
+                           global_ids=index.to_orig(gi),
+                           local_ids=index.to_orig(li), stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Sequential mode: host tile loop with physical skipping (latency benchmarks).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
+                                   "bound_mode"))
+def _tile_step_jit(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
+                   qt, qwb, qwl, sig_b, sig_l, carry, tile,
+                   alpha, beta, gamma, factor,
+                   *, k, kq, pad_len, tile_size, bound_mode):
+    idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
+    return _tile_step(idx_arrays, qt, qwb, qwl, sig_b, sig_l, carry, tile,
+                      alpha, beta, gamma, factor, k=k, kq=kq, pad_len=pad_len,
+                      tile_size=tile_size, bound_mode=bound_mode)
+
+
+def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
+                        params: TwoLevelParams,
+                        warmup: bool = True) -> RetrievalResult:
+    """Host-driven per-query traversal with physical tile skipping + timing.
+
+    Mirrors the paper's single-threaded CPU latency regime: skipped tiles
+    cost nothing (the gather/score call is never issued).
+    """
+    B = len(q_terms)
+    k = params.k
+    kq = min(k, index.tile_size)
+    # Host mirrors for the skip test (cheap gathers).
+    h_tm_b = np.asarray(index.tile_max_b)
+    h_tm_l = np.asarray(index.tile_max_l)
+    h_sig_b = np.asarray(index.sigma_b)
+    h_sig_l = np.asarray(index.sigma_l)
+    alpha, beta, gamma = params.alpha, params.beta, params.gamma
+    factor = params.threshold_factor
+    args = (jnp.float32(alpha), jnp.float32(beta), jnp.float32(gamma),
+            jnp.float32(factor))
+    statics = dict(k=k, kq=kq, pad_len=index.pad_len,
+                   tile_size=index.tile_size, bound_mode=params.bound_mode)
+    ids = np.full((B, k), -1, np.int32)
+    scores = np.full((B, k), -np.inf, np.float32)
+    g_ids = np.full((B, k), -1, np.int32)
+    l_ids = np.full((B, k), -1, np.int32)
+    lat = np.zeros(B, np.float64)
+    stat_rows = np.zeros((B, 6), np.float32)
+
+    def run_query(qi, record):
+        qt = np.asarray(q_terms[qi], dtype=np.int32)
+        qwb = np.asarray(qw_b[qi], dtype=np.float32)
+        qwl = np.asarray(qw_l[qi], dtype=np.float32)
+        sig_b = qwb * h_sig_b[qt]
+        sig_l = qwl * h_sig_l[qt]
+        order = np.argsort(alpha * sig_b + (1 - alpha) * sig_l,
+                           kind="stable")
+        qt, qwb, qwl = qt[order], qwb[order], qwl[order]
+        sig_b, sig_l = sig_b[order], sig_l[order]
+        # Per-tile upper bounds for the host-side skip test: [T]
+        ub = (alpha * qwb[:, None] * h_tm_b[qt]
+              + (1 - alpha) * qwl[:, None] * h_tm_l[qt]).sum(0)
+        j_qt, j_qwb, j_qwl = jnp.asarray(qt), jnp.asarray(qwb), jnp.asarray(qwl)
+        j_sb, j_sl = jnp.asarray(sig_b), jnp.asarray(sig_l)
+        impact = params.schedule == "impact"
+        tile_order = np.argsort(-ub) if impact else np.arange(index.n_tiles)
+        t0 = time.perf_counter()
+        carry = _init_carry(k)
+        th_gl = -np.inf
+        visited = 0
+        for tau in tile_order:
+            if ub[tau] <= th_gl * factor:  # th_gl=-inf never skips
+                if impact:
+                    break  # ub descending: every later tile fails too
+                continue
+            carry = _tile_step_jit(
+                index.docids, index.w_b, index.w_l, index.tile_ptr,
+                index.tile_max_b, index.tile_max_l,
+                j_qt, j_qwb, j_qwl, j_sb, j_sl, carry,
+                jnp.int32(tau), *args, **statics)
+            th_gl = float(carry[0][-1])
+            visited += 1
+        carry = jax.tree_util.tree_map(np.asarray, carry)
+        dt = (time.perf_counter() - t0) * 1e3
+        if record:
+            gv, gi, lv, li, rv, ri, st = carry
+            ids[qi], scores[qi] = ri, rv
+            g_ids[qi], l_ids[qi] = gi, li
+            lat[qi] = dt
+            stat_rows[qi] = np.concatenate([st, [index.n_tiles]])
+
+    if warmup and B > 0:
+        run_query(0, record=False)  # compile outside the timed region
+    for qi in range(B):
+        run_query(qi, record=True)
+
+    stats = dict(zip(("docs_present", "docs_survived", "docs_frozen",
+                      "postings_touched", "tiles_visited", "n_tiles"),
+                     stat_rows.T))
+    return RetrievalResult(ids=index.to_orig(ids), scores=scores,
+                           global_ids=index.to_orig(g_ids),
+                           local_ids=index.to_orig(l_ids), stats=stats,
+                           latencies_ms=lat)

@@ -1,0 +1,82 @@
+"""2GTI parameterization (paper Section 4.1) and method presets.
+
+Three hybrid scores per document, accumulated incrementally:
+
+    Global(d)    = alpha * S_B(d) + (1-alpha) * S_L(d)   -- drives global pruning
+    Local(d)     = beta  * S_B(d) + (1-beta)  * S_L(d)   -- drives local pruning
+    RankScore(d) = gamma * S_B(d) + (1-gamma) * S_L(d)   -- final ranking
+
+with three independent top-k queues / dynamic thresholds. Special cases:
+GTI  = 2GTI(alpha=beta=1);  GT = GTI with gamma=0;
+plain MaxScore on learned weights = 2GTI(alpha=beta=gamma=0).
+``threshold_factor`` multiplies theta_Gl/theta_Lo at pruning time only
+(>1 = rank-unsafe over-estimation, <1 = under-estimation; Table 3 / Fig. 3).
+``bound_mode``: 'list' uses list-level maxima for term partitioning and local
+bounds (paper MaxScore); 'tile' uses tile-level (block-max) maxima — the
+Appendix-B/BMW-style tightening, our TPU-native default for the optimized
+configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+BOUND_MODES = ("list", "tile")
+SCHEDULES = ("docid", "impact")
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoLevelParams:
+    alpha: float = 1.0
+    beta: float = 0.3
+    gamma: float = 0.05
+    k: int = 10
+    threshold_factor: float = 1.0
+    bound_mode: str = "list"
+    # Tile visitation order. 'docid' mirrors DAAT (paper-faithful);
+    # 'impact' visits tiles in descending global upper bound — thresholds
+    # tighten fastest and traversal can stop at the first bound-failing
+    # tile (beyond-paper, score-at-a-time flavored; still bound-safe).
+    schedule: str = "docid"
+
+    def __post_init__(self):
+        if self.bound_mode not in BOUND_MODES:
+            raise ValueError(f"bound_mode must be in {BOUND_MODES}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be in {SCHEDULES}")
+        for name in ("alpha", "beta", "gamma"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} outside [0, 1]")
+
+    def replace(self, **kw) -> "TwoLevelParams":
+        return dataclasses.replace(self, **kw)
+
+
+def original(k: int = 10, gamma: float = 0.0, **kw) -> TwoLevelParams:
+    """Plain MaxScore on the gamma-combined score (alpha=beta=gamma)."""
+    return TwoLevelParams(alpha=gamma, beta=gamma, gamma=gamma, k=k, **kw)
+
+
+def gt(k: int = 10, **kw) -> TwoLevelParams:
+    """GT: BM25-guided pruning, learned-only final ranking."""
+    return TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.0, k=k, **kw)
+
+
+def gti(k: int = 10, gamma: float = 0.05, **kw) -> TwoLevelParams:
+    """GTI: BM25-guided pruning, interpolated final ranking."""
+    return TwoLevelParams(alpha=1.0, beta=1.0, gamma=gamma, k=k, **kw)
+
+
+def accurate(k: int = 10, gamma: float = 0.05, **kw) -> TwoLevelParams:
+    """2GTI-Accurate: beta=0 (learned-only local pruning)."""
+    return TwoLevelParams(alpha=1.0, beta=0.0, gamma=gamma, k=k, **kw)
+
+
+def fast(k: int = 10, beta: float = 0.3, gamma: float = 0.05, **kw) -> TwoLevelParams:
+    """2GTI-Fast: small-but-nonzero beta."""
+    return TwoLevelParams(alpha=1.0, beta=beta, gamma=gamma, k=k, **kw)
+
+
+def linear_combination(k: int = 10, gamma: float = 0.05, **kw) -> TwoLevelParams:
+    """Rank-safe MaxScore over the linear combination (alpha=beta=gamma=g)."""
+    return TwoLevelParams(alpha=gamma, beta=gamma, gamma=gamma, k=k, **kw)

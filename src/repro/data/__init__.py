@@ -1,0 +1,1 @@
+from .corpus import SyntheticCorpus, make_corpus  # noqa: F401

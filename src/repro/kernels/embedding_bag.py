@@ -1,0 +1,56 @@
+"""Pallas TPU embedding-bag: fused gather + weighted segment-sum.
+
+JAX has no native EmbeddingBag; the jnp substrate implements it as
+``take`` + ``segment_sum`` (see ``repro/sparse_ops``). This kernel fuses
+both for the serving hot path of the recsys architectures: the *row shard*
+of a model-parallel embedding table is VMEM-resident (DLRM tables sharded
+over hundreds of chips are ~1 MiB/chip) and each output row accumulates its
+bag's rows with dynamic-index reads, never materializing the gathered
+[B, L, D] intermediate in HBM.
+
+Padding: slot weight 0 (indices may be any in-range value).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, w_ref, tab_ref, o_ref, *, block_b: int, bag_len: int):
+    def body(n, _):
+        b = n // bag_len
+        j = n % bag_len
+        row = tab_ref[idx_ref[b, j], :] * w_ref[b, j]
+        o_ref[b, :] += row
+        return 0
+    o_ref[...] = jnp.zeros_like(o_ref)
+    jax.lax.fori_loop(0, block_b * bag_len, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def embedding_bag(table, indices, weights, *, block_b: int = 8,
+                  interpret: bool = True):
+    """table: [V, D]; indices, weights: [B, L] -> out [B, D] (weighted sum)."""
+    v, d = table.shape
+    b, l = indices.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0
+    kern = functools.partial(_kernel, block_b=block_b, bag_len=l)
+    return pl.pallas_call(
+        kern,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, l), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(indices, weights, table)

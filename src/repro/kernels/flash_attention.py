@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (GQA + causal + KV-offset for decode).
+
+Canonical three-level grid ``(heads, q_blocks, kv_blocks)`` with the kv axis
+innermost (TPU grids execute sequentially minor-to-major, so VMEM scratch
+accumulators persist across kv steps): online-softmax running max / sum /
+weighted accumulator, finalized on the last kv block.
+
+Causal block skipping: kv blocks entirely above the causal diagonal are
+skipped with ``pl.when`` — the same "bound says no work" pattern the guided
+traversal kernel uses for pruned tiles.
+
+GQA is expressed in the BlockSpec index maps: kv specs map head ``h`` to
+``h // group``, so no KV duplication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i,
+            *, block_q: int, block_k: int, sm_scale: float, causal: bool,
+            kv_offset: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    # absolute positions: q rows live at kv_offset + qi*block_q + iota
+    q_pos = (kv_offset + qi * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+    k_pos = (ki * block_k
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+
+    run = True
+    if causal:
+        # skip blocks entirely above the diagonal
+        run = (ki * block_k) <= (kv_offset + qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, :]
+        k = k_ref[0, :, :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i[:, 0], s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        scale = jnp.exp(m_i[:, 0] - m_new)
+        l_new = l_i[:, 0] * scale + p.sum(axis=1)
+        v = v_ref[0, :, :]
+        acc[...] = (acc[...] * scale[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+        m_i[:, 0] = m_new
+        l_i[:, 0] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_i[:, 0], 1e-30)
+        o_ref[0, :, :] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sm_scale", "block_q", "block_k", "kv_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, kv_offset: int = 0,
+                    interpret: bool = True):
+    """q: [H, Sq, D]; k, v: [Hkv, Skv, D] with H % Hkv == 0.
+
+    ``kv_offset``: absolute position of q row 0 (decode: cache length).
+    Batch dimension: vmap this function.
+    """
+    h, sq, d = q.shape
+    hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    n_kv = skv // block_k
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        causal=causal, kv_offset=kv_offset, n_kv_blocks=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=(h, sq // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hi, qi, ki: (hi, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda hi, qi, ki: (hi // group, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda hi, qi, ki: (hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hi, qi, ki: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32),
+                        pltpu.VMEM((block_q, 1), jnp.float32),
+                        pltpu.VMEM((block_q, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

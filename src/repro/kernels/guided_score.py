@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the guided tile-scoring hot loop (paper core).
+
+Fuses, entirely in VMEM, the per-tile inner computation of the 2GTI
+tile-scan engine:
+
+  1. posting scatter -> dense per-term rows via one-hot MXU matvecs
+     (TPU-native scatter: ``w[1,P] @ onehot[P,S_blk]``),
+  2. global-level essential-presence masking,
+  3. the descending local-pruning freeze loop (beta-combined bound vs
+     theta_Lo) with gated accumulation,
+  4. the three hybrid combinations Global/Local/Rank.
+
+One pallas_call scores one (query, tile) pair; the grid tiles the docid
+axis of the tile in ``block_s`` lanes. Skipped-tile work elision is the
+caller's job (the tile is never dispatched); *within* a tile the freeze
+masks gate the accumulate.
+
+VMEM budget per grid cell (defaults Nq<=32, P<=512, block_s=512, f32):
+offs/wb/wl 3 * 32*512*4 = 256 KiB, scratch dense rows 2 * 64 KiB,
+one-hot 512*512*4 = 1 MiB  ->  ~1.4 MiB, comfortably under ~16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scal_ref, ess_ref, pbeta_ref, offs_ref, wb_ref, wl_ref,
+            out_ref, dense_b, dense_l, *, nq: int, block_s: int):
+    th_gl = scal_ref[0]  # noqa: F841  (tile-skip handled by caller)
+    th_lo = scal_ref[1]
+    alpha = scal_ref[2]
+    beta = scal_ref[3]
+    gamma = scal_ref[4]
+    base = pl.program_id(0) * block_s
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+
+    # Pass 1: scatter postings to dense rows via one-hot matvec (MXU),
+    # accumulating essential presence for the global level.
+    def scatter(i, ess_cnt):
+        offs = offs_ref[i, :][None, :]                     # [1, P]
+        onehot = (offs.T == lane).astype(jnp.float32)      # [P, S_blk]
+        db = jnp.dot(wb_ref[i, :][None, :], onehot,
+                     preferred_element_type=jnp.float32)
+        dl = jnp.dot(wl_ref[i, :][None, :], onehot,
+                     preferred_element_type=jnp.float32)
+        valid = (offs >= 0).astype(jnp.float32)
+        cnt = jnp.dot(valid, onehot, preferred_element_type=jnp.float32)
+        dense_b[i, :] = db[0]
+        dense_l[i, :] = dl[0]
+        return ess_cnt + ess_ref[i] * cnt
+    ess_cnt = jax.lax.fori_loop(
+        0, nq, scatter, jnp.zeros((1, block_s), jnp.float32))
+    survive = (ess_cnt > 0).astype(jnp.float32)
+
+    # Pass 2: descending freeze loop (local level).
+    def freeze(j, carry):
+        i = nq - 1 - j
+        sb, sl, alive = carry
+        l_part = beta * sb + (1.0 - beta) * sl
+        ok = jnp.where(ess_ref[i] > 0, 1.0,
+                       (l_part + pbeta_ref[i] > th_lo).astype(jnp.float32))
+        alive = alive * ok
+        gate = survive * alive
+        sb = sb + gate * dense_b[i, :][None, :]
+        sl = sl + gate * dense_l[i, :][None, :]
+        return sb, sl, alive
+    zero = jnp.zeros((1, block_s), jnp.float32)
+    sb, sl, alive = jax.lax.fori_loop(
+        0, nq, freeze, (zero, zero, jnp.ones((1, block_s), jnp.float32)))
+
+    out_ref[0, :] = (alpha * sb + (1.0 - alpha) * sl)[0]    # Global
+    out_ref[1, :] = (beta * sb + (1.0 - beta) * sl)[0]      # Local
+    out_ref[2, :] = (gamma * sb + (1.0 - gamma) * sl)[0]    # RankScore
+    out_ref[3, :] = (survive * alive)[0]                    # eval mask
+    out_ref[4, :] = survive[0]                              # rank mask
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size", "block_s",
+                                             "interpret"))
+def guided_score_tile(offs, wb, wl, essential, prefix_beta, th_gl, th_lo,
+                      alpha, beta, gamma, *, tile_size: int,
+                      block_s: int = 512, interpret: bool = True):
+    """Score one (query, tile) pair. Returns [5, tile_size] (see kernel)."""
+    nq, p = offs.shape
+    block_s = min(block_s, tile_size)
+    assert tile_size % block_s == 0
+    scal = jnp.stack([th_gl, th_lo, alpha, beta, gamma]).astype(jnp.float32)
+    grid = (tile_size // block_s,)
+    kern = functools.partial(_kernel, nq=nq, block_s=block_s)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # scalars
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # essential
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # prefix_beta
+            pl.BlockSpec((nq, p), lambda i: (0, 0)),               # offs
+            pl.BlockSpec((nq, p), lambda i: (0, 0)),               # wb
+            pl.BlockSpec((nq, p), lambda i: (0, 0)),               # wl
+        ],
+        out_specs=pl.BlockSpec((5, block_s), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((5, tile_size), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nq, block_s), jnp.float32),
+                        pltpu.VMEM((nq, block_s), jnp.float32)],
+        interpret=interpret,
+    )(scal, essential.astype(jnp.float32), prefix_beta.astype(jnp.float32),
+      offs, wb, wl)

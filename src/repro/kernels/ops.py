@@ -1,0 +1,14 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True everywhere in this repo (CPU container);
+on a real TPU deployment set ``REPRO_PALLAS_COMPILE=1`` to lower natively.
+"""
+from __future__ import annotations
+
+import os
+
+from .embedding_bag import embedding_bag  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .guided_score import guided_score_tile  # noqa: F401
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"

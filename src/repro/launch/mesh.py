@@ -1,0 +1,28 @@
+"""Production mesh builders. Functions, not module constants — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a 2-pod leading axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1):
+    """Elastic mesh builder for arbitrary DP/TP splits (--dp/--tp)."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes that carry data parallelism (pod axis folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh):
+    return "model" if "model" in mesh.axis_names else None

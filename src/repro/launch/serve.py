@@ -1,0 +1,35 @@
+"""Serving launcher: batched 2GTI retrieval over a synthetic corpus.
+
+    PYTHONPATH=src python -m repro.launch.serve --preset splade_like
+"""
+import argparse
+
+from repro.core import build_index, twolevel
+from repro.data import make_corpus
+from repro.serve import Request, RetrievalServer, ServerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="splade_like")
+    ap.add_argument("--docs", type=int, default=16384)
+    ap.add_argument("--qps", type=float, default=200.0)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--beta", type=float, default=0.3)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+    corpus = make_corpus(args.preset, n_docs=args.docs, n_terms=4096,
+                         n_queries=64)
+    index = build_index(corpus.merged("scaled"), tile_size=1024)
+    params = twolevel.fast(k=args.k, beta=args.beta).replace(
+        schedule="impact")
+    srv = RetrievalServer(index, params, ServerConfig(max_batch=16))
+    reqs = [Request(corpus.queries[i % 64], corpus.q_weights_b[i % 64],
+                    corpus.q_weights_l[i % 64])
+            for i in range(args.requests)]
+    stats = srv.run_workload(reqs, qps=args.qps)
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Training launcher: --arch <id> [--shape train_4k] [--smoke].
+
+On this CPU container the default is the reduced (smoke) configuration —
+the full configs are exercised via dryrun.py. On real hardware, drop
+--smoke and set --dp/--tp to the cluster shape.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.data.stream import (GraphStore, lm_batch, molecule_batch,
+                               recsys_batch)
+from repro.launch.steps import adapt_config, init_fn, loss_fn
+from repro.models.transformer import NO_RULES
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def data_provider(arch, shape, cfg, batch_size):
+    fam = arch.family
+    if fam == "lm":
+        return lambda step: lm_batch(step, batch=batch_size, seq=64,
+                                     vocab=cfg.vocab)
+    if fam == "gnn":
+        if shape == "molecule":
+            return lambda step: molecule_batch(
+                step, batch=batch_size, atoms=8, edges=16,
+                n_types=cfg.n_atom_types)
+        store = GraphStore(2048, 8192, cfg.d_feat, cfg.n_out)
+        return lambda step: {k: jax.numpy.asarray(v) for k, v in
+                             store.sample(step, 64).items()}
+    from repro.models import recsys as R
+    if isinstance(cfg, R.DLRMConfig):
+        return lambda step: recsys_batch(step, kind="dlrm", cfg=cfg,
+                                         batch=batch_size)
+    if isinstance(cfg, R.DINConfig):
+        return lambda step: recsys_batch(step, kind="din", cfg=cfg,
+                                         batch=batch_size)
+    # two-tower / bert4rec: reuse smoke batches keyed by step
+    from repro.launch.steps import smoke_batch
+    def fn(step):
+        b = smoke_batch(arch, shape, cfg, seed=step)
+        return b["batch"] if "batch" in b else b
+    return fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch = get_arch(args.arch)
+    shape = args.shape or {"lm": "train_4k", "gnn": "molecule",
+                           "recsys": "train_batch"}[arch.family]
+    cfg = adapt_config(arch, shape, arch.smoke() if args.smoke else None)
+    out = args.out or f"runs/{args.arch}"
+    lfn = loss_fn(arch, shape, cfg, NO_RULES)
+    trainer = Trainer(
+        lfn, init_fn(arch, shape, cfg),
+        data_provider(arch, shape, cfg, args.batch),
+        TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 2,
+                                                             10),
+                      out_dir=out, log_every=5),
+        AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=args.steps))
+    res = trainer.run()
+    print(f"{args.arch}/{shape}: loss {res['losses'][0]:.4f} -> "
+          f"{np.mean(res['losses'][-5:]):.4f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

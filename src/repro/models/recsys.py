@@ -1,0 +1,312 @@
+"""RecSys architectures: DLRM, DIN, two-tower retrieval, BERT4Rec.
+
+Embedding tables are the hot substrate: built on the manual EmbeddingBag
+(``repro/sparse_ops``), row-shardable over the full mesh (model-parallel
+embeddings, the DLRM pattern). The two-tower serve path ``retrieval_cand``
+transfers the paper's technique to dense retrieval via
+``repro/core/dense_guided``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..sparse_ops import embedding_bag
+from .transformer import (Rules, NO_RULES, TransformerConfig, forward,
+                          init_params as init_tf_params)
+
+
+def _mlp_init(key, dims, pt):
+    layers = []
+    for k, (i, o) in zip(jax.random.split(key, len(dims) - 1),
+                         zip(dims[:-1], dims[1:])):
+        layers.append({"w": (jax.random.normal(k, (i, o))
+                             * (2.0 / (i + o)) ** 0.5).astype(pt),
+                       "b": jnp.zeros((o,), pt)})
+    return layers
+
+
+def _mlp(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"].astype(x.dtype) + l["b"].astype(x.dtype)
+        if final_act or i < len(layers) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_params(dims):
+    return sum(i * o + o for i, o in zip(dims[:-1], dims[1:]))
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091), RM-2 scale
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_per_field: int = 1_000_000
+    bot_mlp: tuple = (13, 512, 256, 64)
+    top_mlp_hidden: tuple = (512, 512, 256, 1)
+    multi_hot: int = 1          # lookups per field (EmbeddingBag when > 1)
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        n_inter = self.n_sparse + 1
+        d_inter = n_inter * (n_inter - 1) // 2 + self.embed_dim
+        return (self.n_sparse * self.vocab_per_field * self.embed_dim
+                + _mlp_params(self.bot_mlp)
+                + _mlp_params((d_inter,) + self.top_mlp_hidden))
+
+
+def init_dlrm(cfg: DLRMConfig, key: jax.Array) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pt = cfg.param_dtype
+    tables = (jax.random.normal(
+        k1, (cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim)) * 0.01
+    ).astype(pt)
+    n_inter = cfg.n_sparse + 1
+    d_inter = n_inter * (n_inter - 1) // 2 + cfg.embed_dim
+    return {"tables": tables,
+            "bot": _mlp_init(k2, list(cfg.bot_mlp), pt),
+            "top": _mlp_init(k3, [d_inter] + list(cfg.top_mlp_hidden), pt)}
+
+
+def dlrm_forward(cfg: DLRMConfig, params: dict, batch: dict,
+                 rules: Rules = NO_RULES):
+    """batch: dense [B, 13] f32, sparse [B, 26, multi_hot] int32 -> [B]."""
+    cd = cfg.compute_dtype
+    dense = batch["dense"].astype(cd)
+    bot = _mlp(params["bot"], dense, final_act=True)       # [B, D]
+    sparse = batch["sparse"]
+    b = sparse.shape[0]
+
+    def field(f):
+        idx = sparse[:, f, :]
+        w = jnp.ones(idx.shape, cd)
+        return embedding_bag(params["tables"][f].astype(cd), idx, w)
+
+    embs = jnp.stack([field(f) for f in range(cfg.n_sparse)], 1)  # [B,26,D]
+    feats = jnp.concatenate([bot[:, None, :], embs], axis=1)      # [B,27,D]
+    feats = rules.c(feats, (rules.batch, None, None))
+    inter = jnp.einsum("bnd,bmd->bnm", feats, feats)
+    n = feats.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    flat = inter[:, iu, ju]                                       # [B, 351]
+    top_in = jnp.concatenate([bot, flat], axis=-1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def dlrm_loss(cfg: DLRMConfig, params: dict, batch: dict,
+              rules: Rules = NO_RULES):
+    logit = dlrm_forward(cfg, params, batch, rules)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# DIN (arXiv:1706.06978)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    embed_dim: int = 18
+    seq_len: int = 100
+    n_items: int = 200_000
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        return (self.n_items * d
+                + _mlp_params((4 * d,) + self.attn_mlp + (1,))
+                + _mlp_params((2 * d,) + self.mlp + (1,)))
+
+
+def init_din(cfg: DINConfig, key: jax.Array) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pt = cfg.param_dtype
+    return {
+        "items": (jax.random.normal(k1, (cfg.n_items, cfg.embed_dim))
+                  * 0.01).astype(pt),
+        "attn": _mlp_init(k2, [4 * cfg.embed_dim, *cfg.attn_mlp, 1], pt),
+        "mlp": _mlp_init(k3, [2 * cfg.embed_dim, *cfg.mlp, 1], pt),
+    }
+
+
+def din_forward(cfg: DINConfig, params: dict, batch: dict,
+                rules: Rules = NO_RULES):
+    """batch: hist [B, L] int (0 pad), target [B] int -> logits [B]."""
+    cd = cfg.compute_dtype
+    hist = jnp.take(params["items"], batch["hist"], axis=0).astype(cd)
+    tgt = jnp.take(params["items"], batch["target"], axis=0).astype(cd)
+    tgt_b = jnp.broadcast_to(tgt[:, None, :], hist.shape)
+    att_in = jnp.concatenate(
+        [hist, tgt_b, hist * tgt_b, hist - tgt_b], axis=-1)
+    scores = _mlp(params["attn"], att_in)[..., 0]          # [B, L]
+    mask = batch["hist"] > 0
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    user = jnp.einsum("bl,bld->bd", w, hist)
+    x = jnp.concatenate([user, tgt], axis=-1)
+    x = rules.c(x, (rules.batch, None))
+    return _mlp(params["mlp"], x)[:, 0]
+
+
+def din_loss(cfg: DINConfig, params: dict, batch: dict,
+             rules: Rules = NO_RULES):
+    logit = din_forward(cfg, params, batch, rules)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube RecSys'19 style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    embed_dim: int = 256
+    tower_mlp: tuple = (1024, 512, 256)
+    n_user_feats: int = 500_000
+    n_items: int = 2_000_000
+    user_bag: int = 16          # multi-hot user history bag size
+    feat_dim: int = 128         # embedding dim feeding the towers
+    n_negatives: int = 1024     # sampled softmax negatives
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        return (self.n_user_feats * self.feat_dim
+                + self.n_items * self.feat_dim
+                + _mlp_params((self.feat_dim,) + self.tower_mlp) * 2)
+
+
+def init_two_tower(cfg: TwoTowerConfig, key: jax.Array) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pt = cfg.param_dtype
+    return {
+        "user_embed": (jax.random.normal(k1, (cfg.n_user_feats, cfg.feat_dim))
+                       * 0.02).astype(pt),
+        "item_embed": (jax.random.normal(k2, (cfg.n_items, cfg.feat_dim))
+                       * 0.02).astype(pt),
+        "user_tower": _mlp_init(k3, [cfg.feat_dim, *cfg.tower_mlp], pt),
+        "item_tower": _mlp_init(k4, [cfg.feat_dim, *cfg.tower_mlp], pt),
+    }
+
+
+def user_encode(cfg: TwoTowerConfig, params: dict, user_feats, rules=NO_RULES):
+    cd = cfg.compute_dtype
+    bag = embedding_bag(params["user_embed"].astype(cd), user_feats,
+                        jnp.asarray(user_feats > 0, cd), mode="mean")
+    u = _mlp(params["user_tower"], bag)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def item_encode(cfg: TwoTowerConfig, params: dict, item_ids, rules=NO_RULES):
+    cd = cfg.compute_dtype
+    e = jnp.take(params["item_embed"], item_ids, axis=0).astype(cd)
+    v = _mlp(params["item_tower"], e)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_loss(cfg: TwoTowerConfig, params: dict, batch: dict,
+                   rules: Rules = NO_RULES):
+    """Sampled softmax with shared negatives + logQ correction.
+
+    batch: user_feats [B, bag], pos_item [B], neg_items [N], neg_logq [N].
+    """
+    u = user_encode(cfg, params, batch["user_feats"], rules)   # [B, D]
+    pos = item_encode(cfg, params, batch["pos_item"], rules)   # [B, D]
+    neg = item_encode(cfg, params, batch["neg_items"], rules)  # [N, D]
+    u = rules.c(u, (rules.batch, None))
+    temp = 20.0
+    s_pos = (u * pos).sum(-1) * temp                            # [B]
+    s_neg = u @ neg.T * temp - batch["neg_logq"][None, :]       # [B, N]
+    logits = jnp.concatenate([s_pos[:, None], s_neg], axis=1)
+    return -jnp.mean(jax.nn.log_softmax(logits, axis=-1)[:, 0])
+
+
+def two_tower_score_candidates(cfg: TwoTowerConfig, params: dict,
+                               user_feats, cand_emb, rules: Rules = NO_RULES):
+    """Bulk-score 1 query against precomputed candidate tower outputs.
+
+    cand_emb: [N_cand, D] (item tower outputs). Returns scores [N_cand].
+    """
+    u = user_encode(cfg, params, user_feats, rules)             # [1, D]
+    return (cand_emb.astype(u.dtype) @ u[0]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690) — reuses the transformer, bidirectional
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    n_items: int = 50_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    unroll: bool = False
+
+    def tf_config(self) -> TransformerConfig:
+        return TransformerConfig(
+            n_layers=self.n_blocks, d_model=self.embed_dim,
+            n_heads=self.n_heads, n_kv_heads=self.n_heads,
+            d_ff=4 * self.embed_dim, vocab=self.n_items + 2,  # +pad +mask
+            causal=False, rope=False, max_position=self.seq_len,
+            tie_embeddings=True, compute_dtype=self.compute_dtype,
+            param_dtype=self.param_dtype, remat=False, unroll=self.unroll)
+
+    def param_count(self) -> int:
+        return self.tf_config().param_count()
+
+
+def init_bert4rec(cfg: Bert4RecConfig, key: jax.Array) -> dict:
+    return init_tf_params(cfg.tf_config(), key)
+
+
+def bert4rec_loss(cfg: Bert4RecConfig, params: dict, batch: dict,
+                  rules: Rules = NO_RULES):
+    """Masked-item prediction with *sampled* softmax: items/targets/mask
+    [B, S] plus shared negatives ``neg_items`` [N]. A full softmax over a
+    1M-item catalog would materialize [B, S, V] logits (hundreds of GB per
+    device at the assigned batch) — sampled softmax is how production
+    BERT4Rec-style models train at catalog scale."""
+    tf_cfg = cfg.tf_config()
+    hidden, _, _ = forward(tf_cfg, params, batch["items"], rules)
+    emb = params["embed"].astype(hidden.dtype)
+    pos_e = jnp.take(emb, batch["targets"], axis=0)          # [B, S, D]
+    pos = jnp.einsum("bsd,bsd->bs", hidden, pos_e)
+    neg_e = jnp.take(emb, batch["neg_items"], axis=0)        # [N, D]
+    neg = jnp.einsum("bsd,nd->bsn", hidden, neg_e,
+                     preferred_element_type=jnp.float32)
+    lse = jnp.logaddexp(pos.astype(jnp.float32),
+                        jax.nn.logsumexp(neg, axis=-1))
+    nll = lse - pos
+    mask = batch["mask"].astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def bert4rec_score_catalog(cfg: Bert4RecConfig, params: dict, items,
+                           cand_ids, rules: Rules = NO_RULES):
+    """Next-item scores of candidate ids for each sequence: [B, N_cand]."""
+    tf_cfg = cfg.tf_config()
+    hidden, _, _ = forward(tf_cfg, params, items, rules)
+    state = hidden[:, -1, :]                                 # [B, D]
+    cand = jnp.take(params["embed"], cand_ids, axis=0).astype(state.dtype)
+    return jnp.einsum("bd,nd->bn", state, cand,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,167 @@
+"""SchNet (Schütt et al., arXiv:1706.08566): continuous-filter convolutions.
+
+Kernel regime: triplet-free edge gather — RBF-expanded distances feed a
+filter MLP; messages are ``x[src] * W(rbf(d_ij))`` aggregated by
+``segment_sum`` (the JAX-native message-passing scatter).
+
+Two input modes share the interaction trunk:
+- ``molecule``: batched small graphs (z [B, N] atom types, edges + distances
+  per graph), energy readout (sum-pooled atomwise MLP).
+- ``graph``: one large graph (node features [N, F] embedded linearly, flat
+  edge index + synthetic distances), per-node class logits — used for the
+  citation/products/reddit assigned shapes, where SchNet's geometric prior
+  is re-based on edge "lengths" supplied by the data pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_atom_types: int = 100     # molecule mode vocabulary
+    d_feat: int = 0             # >0: graph mode with linear feature embed
+    n_out: int = 1              # 1 = energy; >1 = node classes
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    unroll: bool = False  # unroll interactions (dry-run cost probes)
+
+    def param_count(self) -> int:
+        d, r = self.d_hidden, self.n_rbf
+        embed = (self.d_feat * d + d) if self.d_feat else self.n_atom_types * d
+        per_inter = (r * d + d) + (d * d + d) + (d * d) + (d * d + d)
+        out = d * d + d + d * self.n_out + self.n_out
+        return embed + self.n_interactions * per_inter + out
+
+
+def init_params(cfg: SchNetConfig, key: jax.Array) -> dict:
+    ks = iter(jax.random.split(key, 4 + 4 * cfg.n_interactions))
+    pt = cfg.param_dtype
+    d, r = cfg.d_hidden, cfg.n_rbf
+
+    def dense(k, i, o):
+        return {"w": (jax.random.normal(k, (i, o)) / jnp.sqrt(i)).astype(pt),
+                "b": jnp.zeros((o,), pt)}
+
+    if cfg.d_feat:
+        embed = dense(next(ks), cfg.d_feat, d)
+    else:
+        embed = {"w": (jax.random.normal(next(ks), (cfg.n_atom_types, d))
+                       * 0.1).astype(pt)}
+    inters = []
+    for _ in range(cfg.n_interactions):
+        inters.append({
+            "filter1": dense(next(ks), r, d),
+            "in2f": {"w": (jax.random.normal(next(ks), (d, d))
+                           / jnp.sqrt(d)).astype(pt)},
+            "f2out": dense(next(ks), d, d),
+            "post": dense(next(ks), d, d),
+        })
+    return {"embed": embed,
+            "inters": jax.tree_util.tree_map(lambda *x: jnp.stack(x),
+                                             *inters),
+            "out1": dense(next(ks), d, d),
+            "out2": dense(next(ks), d, cfg.n_out)}
+
+
+def _apply(layer, x):
+    return x @ layer["w"].astype(x.dtype) + layer["b"].astype(x.dtype)
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def rbf_expand(dist: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """Gaussian radial basis on [0, cutoff]: [E] -> [E, n_rbf]."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf, dtype=dist.dtype)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * jnp.square(dist[:, None] - centers[None, :]))
+
+
+def _interaction(cfg: SchNetConfig, lp: dict, x, src, dst, rbf, n_nodes):
+    """cfconv + atomwise post layer. x: [N, D]."""
+    w = shifted_softplus(_apply(lp["filter1"], rbf))       # [E, D]
+    xs = (x @ lp["in2f"]["w"].astype(x.dtype))[src]        # gather source
+    msg = xs * w
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    h = shifted_softplus(_apply(lp["f2out"], agg))
+    h = _apply(lp["post"], h)
+    return x + h
+
+
+def encode(cfg: SchNetConfig, params: dict, nodes, src, dst, dist):
+    """Shared trunk. nodes: int [N] (molecule) or float [N, F] (graph)."""
+    cd = cfg.compute_dtype
+    if cfg.d_feat:
+        x = _apply(params["embed"], nodes.astype(cd))
+    else:
+        x = jnp.take(params["embed"]["w"], nodes, axis=0).astype(cd)
+    rbf = rbf_expand(dist.astype(cd), cfg.n_rbf, cfg.cutoff)
+    n_nodes = x.shape[0]
+
+    def body(x, lp):
+        return _interaction(cfg, lp, x, src, dst, rbf, n_nodes), None
+
+    x, _ = jax.lax.scan(body, x, params["inters"],
+                        unroll=cfg.n_interactions if cfg.unroll else 1)
+    h = shifted_softplus(_apply(params["out1"], x))
+    return _apply(params["out2"], h)                       # [N, n_out]
+
+
+# --------------------------------------------------------------------------
+# molecule mode (batched small graphs)
+# --------------------------------------------------------------------------
+
+def molecule_energy(cfg: SchNetConfig, params: dict, batch: dict):
+    """batch: z [B,N] int (0 = pad), pos [B,N,3], edge_src/dst [B,E] (pad -1).
+
+    Distances are computed from positions; padded edges masked out.
+    Returns per-molecule energies [B].
+    """
+    b, n = batch["z"].shape
+    e = batch["edge_src"].shape[1]
+
+    def one(z, pos, es, ed):
+        emask = es >= 0
+        es_s = jnp.where(emask, es, 0)
+        ed_s = jnp.where(emask, ed, 0)
+        d = jnp.linalg.norm(pos[es_s] - pos[ed_s] + 1e-9, axis=-1)
+        d = jnp.where(emask, d, cfg.cutoff)  # pad edges -> zero RBF weight
+        out = encode(cfg, params, z, es_s, ed_s, d)[:, 0]
+        return jnp.where(z > 0, out, 0.0).sum()
+
+    return jax.vmap(one)(batch["z"], batch["pos"], batch["edge_src"],
+                         batch["edge_dst"])
+
+
+def molecule_loss(cfg: SchNetConfig, params: dict, batch: dict):
+    pred = molecule_energy(cfg, params, batch)
+    return jnp.mean(jnp.square(pred - batch["energy"]))
+
+
+# --------------------------------------------------------------------------
+# graph mode (node classification; full-batch or sampled subgraph)
+# --------------------------------------------------------------------------
+
+def node_logits(cfg: SchNetConfig, params: dict, batch: dict):
+    """batch: x [N,F], edge_src/dst [E], edge_dist [E] -> logits [N, C]."""
+    return encode(cfg, params, batch["x"], batch["edge_src"],
+                  batch["edge_dst"], batch["edge_dist"])
+
+
+def node_loss(cfg: SchNetConfig, params: dict, batch: dict):
+    logits = node_logits(cfg, params, batch)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    mask = batch.get("train_mask",
+                     jnp.ones_like(batch["labels"], jnp.float32))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,2 @@
+from .engine import (RetrievalServer, Request,  # noqa: F401
+                     ServerConfig)

@@ -1,0 +1,100 @@
+"""Batched retrieval serving engine with latency accounting.
+
+Requests accumulate into batches (max size / max wait); each batch runs the
+2GTI batched engine once. Per-request latency = enqueue -> results, so the
+MRT/P99 numbers include batching delay — the metric regime of the paper's
+tables, extended to a served setting. A synchronous simulator
+(``run_workload``) drives it with a Poisson arrival process for benchmarks
+on this single-core container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.index import BlockedImpactIndex
+from ..core.traversal import retrieve_batched
+from ..core.twolevel import TwoLevelParams
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch: int = 32
+    max_wait_ms: float = 2.0
+    pad_terms: int = 16
+
+
+@dataclasses.dataclass
+class Request:
+    terms: np.ndarray
+    qw_b: np.ndarray
+    qw_l: np.ndarray
+    t_enqueue: float = 0.0
+    t_done: float = 0.0
+    ids: np.ndarray | None = None
+    scores: np.ndarray | None = None
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_enqueue) * 1e3
+
+
+class RetrievalServer:
+    def __init__(self, index: BlockedImpactIndex, params: TwoLevelParams,
+                 cfg: ServerConfig = ServerConfig()):
+        self.index = index
+        self.params = params
+        self.cfg = cfg
+        self.pending: list[Request] = []
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request, now: float) -> None:
+        req.t_enqueue = now
+        self.pending.append(req)
+
+    def _flush(self) -> None:
+        batch, self.pending = (self.pending[:self.cfg.max_batch],
+                               self.pending[self.cfg.max_batch:])
+        n, p = len(batch), self.cfg.pad_terms
+        terms = np.zeros((n, p), np.int32)
+        qw_b = np.zeros((n, p), np.float32)
+        qw_l = np.zeros((n, p), np.float32)
+        for i, r in enumerate(batch):
+            k = min(len(r.terms), p)
+            terms[i, :k] = r.terms[:k]
+            qw_b[i, :k] = r.qw_b[:k]
+            qw_l[i, :k] = r.qw_l[:k]
+        res = retrieve_batched(self.index, terms, qw_b, qw_l, self.params)
+        done = time.perf_counter()
+        for i, r in enumerate(batch):
+            r.ids, r.scores, r.t_done = res.ids[i], res.scores[i], done
+        self.completed.extend(batch)
+
+    def run_workload(self, requests: list[Request], qps: float,
+                     seed: int = 0) -> dict:
+        """Poisson arrivals at ``qps``; synchronous single-host execution."""
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / qps, len(requests)))
+        t0 = time.perf_counter()
+        i = 0
+        while i < len(requests) or self.pending:
+            now = time.perf_counter() - t0
+            while i < len(requests) and arrivals[i] <= now:
+                self.submit(requests[i], t0 + arrivals[i])
+                i += 1
+            oldest_wait = (time.perf_counter() - self.pending[0].t_enqueue
+                           if self.pending else 0.0)
+            if (len(self.pending) >= self.cfg.max_batch
+                    or (self.pending
+                        and oldest_wait * 1e3 >= self.cfg.max_wait_ms)
+                    or (i >= len(requests) and self.pending)):
+                self._flush()
+            elif not self.pending and i < len(requests):
+                time.sleep(max(0.0, arrivals[i] - now))
+        lat = np.array([r.latency_ms for r in self.completed])
+        return {"n": len(lat), "mrt_ms": float(lat.mean()),
+                "p50_ms": float(np.percentile(lat, 50)),
+                "p99_ms": float(np.percentile(lat, 99)),
+                "qps_achieved": len(lat) / (time.perf_counter() - t0)}

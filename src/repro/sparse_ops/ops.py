@@ -1,0 +1,49 @@
+"""Sparse/ragged primitives JAX lacks natively — built, not stubbed.
+
+EmbeddingBag = gather + weighted segment-sum (torch ``nn.EmbeddingBag``
+equivalent); message passing = scatter over an edge index via
+``jax.ops.segment_sum`` — these ARE the system's GNN/recsys substrate.
+The Pallas kernel in ``repro/kernels/embedding_bag.py`` is the fused
+serving-path variant of the same contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None,
+                  mode: str = "sum") -> jax.Array:
+    """table [V, D]; indices [B, L] (pad via weight 0) -> [B, D]."""
+    rows = jnp.take(table, indices, axis=0)               # [B, L, D]
+    if weights is None:
+        weights = jnp.ones(indices.shape, dtype=table.dtype)
+    out = (rows * weights[..., None].astype(rows.dtype)).sum(axis=1)
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        out = out / denom.astype(out.dtype)
+    return out
+
+
+def segment_softmax(scores: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Softmax over variable-size segments (edge-softmax for GAT-style)."""
+    seg_max = jax.ops.segment_max(scores, segment_ids, num_segments)
+    ex = jnp.exp(scores - seg_max[segment_ids])
+    seg_sum = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(seg_sum[segment_ids], 1e-30)
+
+
+def scatter_mean(values: jax.Array, segment_ids: jax.Array,
+                 num_segments: int) -> jax.Array:
+    s = jax.ops.segment_sum(values, segment_ids, num_segments)
+    c = jax.ops.segment_sum(jnp.ones_like(segment_ids, dtype=values.dtype),
+                            segment_ids, num_segments)
+    return s / jnp.maximum(c, 1.0)[..., None] if values.ndim > 1 \
+        else s / jnp.maximum(c, 1.0)
+
+
+def degree(edge_dst: jax.Array, num_nodes: int) -> jax.Array:
+    return jax.ops.segment_sum(jnp.ones_like(edge_dst, dtype=jnp.float32),
+                               edge_dst, num_nodes)

@@ -1,0 +1,2 @@
+from .optimizer import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                        cosine_schedule)

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+only launch/dryrun.py (and its subprocess test) uses 512 fake devices."""
+import numpy as np
+import pytest
+
+from repro.data import make_corpus
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return make_corpus("splade_like", n_docs=2048, n_terms=512,
+                       n_queries=12, n_q_terms=5, n_rel=3,
+                       avg_doc_terms=24, seed=7)
+
+
+@pytest.fixture(scope="session")
+def aligned_corpus():
+    return make_corpus("unicoil_like", n_docs=2048, n_terms=512,
+                       n_queries=8, n_q_terms=5, n_rel=3,
+                       avg_doc_terms=24, seed=11)
+
+
+def topk_scores_match(a_scores, b_scores, rtol=2e-5, atol=1e-4):
+    np.testing.assert_allclose(a_scores, b_scores, rtol=rtol, atol=atol)

@@ -1,0 +1,60 @@
+"""Guided dense retrieval (2GTI transfer to the two-tower serve path)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dense_guided import (build_dense_index, exhaustive_dense,
+                                     retrieve_dense)
+from repro.core.twolevel import TwoLevelParams
+
+
+@pytest.fixture(scope="module")
+def dense_index():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((8, 64)) * 2
+    assign = rng.integers(0, 8, 4096)
+    emb = centers[assign] + rng.standard_normal((4096, 64))
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    emb = emb[np.argsort(assign, kind="stable")]
+    return build_dense_index(jnp.asarray(emb, jnp.float32),
+                             block_size=512, d_cheap=16)
+
+
+def _query(seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(64).astype(np.float32)
+    return jnp.asarray(q / np.linalg.norm(q))
+
+
+def test_rank_safe_equals_exhaustive(dense_index):
+    p = TwoLevelParams(alpha=0.0, beta=0.0, gamma=0.0, k=10)
+    for seed in range(3):
+        q = _query(seed)
+        vals, ids, _ = retrieve_dense(dense_index, q, p)
+        ev, ei = exhaustive_dense(dense_index, q, 10)
+        np.testing.assert_allclose(vals, ev, rtol=1e-5, atol=1e-5)
+        assert set(ids.tolist()) == set(ei.tolist())
+
+
+def test_pca_rotation_preserves_scores(dense_index):
+    """Rotation must not change exact dot products (orthogonality)."""
+    q = _query(7)
+    r = np.asarray(dense_index.rotation)
+    np.testing.assert_allclose(r @ r.T, np.eye(64), atol=1e-4)
+
+
+def test_guided_small_beta_keeps_recall(dense_index):
+    p = TwoLevelParams(alpha=1.0, beta=0.2, gamma=0.0, k=10)
+    rec = 0.0
+    for seed in range(4):
+        q = _query(seed)
+        _, ids, _ = retrieve_dense(dense_index, q, p)
+        _, ei = exhaustive_dense(dense_index, q, 10)
+        rec += len(set(ids.tolist()) & set(ei.tolist())) / 10
+    assert rec / 4 >= 0.9
+
+
+def test_guided_beta_one_prunes_hard(dense_index):
+    p = TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.0, k=10)
+    _, _, st = retrieve_dense(dense_index, _query(0), p)
+    assert st["candidates_fully_scored"] < st["n_candidates"] * 0.5

@@ -1,0 +1,135 @@
+"""Property-based tests (hypothesis) for the paper's formal claims (§4.2).
+
+Prop 1: any doc in the top-k of all three rankings R_alpha, R_beta, R_gamma
+        is in 2GTI's output (engine + oracle).
+Prop 2: with alpha=beta or beta=gamma, mean R_gamma-score of 2GTI's top-k
+        >= that of the two-stage R2_{alpha,gamma} (oracle).
+Plus structural invariants: threshold monotonicity, queue ordering.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_index, twolevel
+from repro.core.oracle import daat_2gti, ranked_list, score_all_merged, two_stage
+from repro.core.traversal import retrieve_batched
+from repro.data import make_corpus
+
+K = 8
+GRID = [i / 20.0 for i in range(21)]
+
+
+def _corpus(seed):
+    return make_corpus("deepimpact_like", n_docs=512, n_terms=128,
+                       n_queries=4, n_q_terms=4, n_rel=2,
+                       avg_doc_terms=12, seed=seed)
+
+
+def _unique_topk(merged, qt, qwb, qwl, x, k):
+    """Top-k of R_x; returns None when the boundary is tied (paper assumes
+    unique top-k subsets)."""
+    s = score_all_merged(merged, qt, qwb, qwl, x)
+    order = np.argsort(-s, kind="stable")
+    if len(s) > k and abs(s[order[k - 1]] - s[order[k]]) < 1e-5:
+        return None
+    return set(int(d) for d in order[:k])
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 50), alpha=st.sampled_from(GRID),
+       beta=st.sampled_from(GRID), gamma=st.sampled_from([0.0, 0.05, 0.3]))
+def test_prop1_triple_topk_membership(seed, alpha, beta, gamma):
+    corpus = _corpus(seed)
+    merged = corpus.merged("scaled")
+    index = build_index(merged, tile_size=128, pad_multiple=128)
+    p = twolevel.TwoLevelParams(alpha=alpha, beta=beta, gamma=gamma, k=K)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p)
+    for qi in range(len(corpus.queries)):
+        qt, qwb, qwl = (corpus.queries[qi], corpus.q_weights_b[qi],
+                        corpus.q_weights_l[qi])
+        tops = [_unique_topk(merged, qt, qwb, qwl, x, K)
+                for x in (alpha, beta, gamma)]
+        if any(t is None for t in tops):
+            continue  # tie at the boundary: proposition precondition fails
+        must_have = tops[0] & tops[1] & tops[2]
+        got_engine = set(int(d) for d in res.ids[qi])
+        assert must_have <= got_engine, (
+            f"engine violated Prop 1: missing {must_have - got_engine}")
+        ids_o, _, _ = daat_2gti(merged, qt, qwb, qwl, p)
+        got_oracle = set(int(d) for d in ids_o)
+        assert must_have <= got_oracle, (
+            f"oracle violated Prop 1: missing {must_have - got_oracle}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), alpha=st.sampled_from(GRID),
+       gamma=st.sampled_from([0.0, 0.05, 0.2]),
+       tie=st.sampled_from(["alpha", "gamma"]))
+def test_prop2_beats_two_stage(seed, alpha, gamma, tie):
+    """alpha=beta or beta=gamma => mean R_gamma score of 2GTI >= R2."""
+    corpus = _corpus(seed)
+    merged = corpus.merged("scaled")
+    beta = alpha if tie == "alpha" else gamma
+    p = twolevel.TwoLevelParams(alpha=alpha, beta=beta, gamma=gamma, k=K)
+    for qi in range(2):
+        qt, qwb, qwl = (corpus.queries[qi], corpus.q_weights_b[qi],
+                        corpus.q_weights_l[qi])
+        ids_o, _, _ = daat_2gti(merged, qt, qwb, qwl, p)
+        s = score_all_merged(merged, qt, qwb, qwl, gamma)
+        ids_o = ids_o[ids_o >= 0]
+        ids_2s, _ = two_stage(merged, qt, qwb, qwl, alpha, gamma, K)
+        mean_2gti = float(s[ids_o].mean()) if len(ids_o) else 0.0
+        mean_2s = float(s[ids_2s].mean()) if len(ids_2s) else 0.0
+        assert mean_2gti >= mean_2s - 1e-4, (
+            f"Prop 2 violated: {mean_2gti} < {mean_2s}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 50),
+       gamma=st.sampled_from([0.0, 0.1, 0.5, 1.0]))
+def test_safe_config_equals_exhaustive(seed, gamma):
+    """alpha=beta=gamma is rank-safe: engine == exhaustive top-k scores."""
+    corpus = _corpus(seed)
+    merged = corpus.merged("zero")
+    index = build_index(merged, tile_size=128, pad_multiple=128)
+    p = twolevel.original(k=K, gamma=gamma)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p)
+    for qi in range(len(corpus.queries)):
+        _, vals = ranked_list(merged, corpus.queries[qi],
+                              corpus.q_weights_b[qi],
+                              corpus.q_weights_l[qi], gamma, K)
+        np.testing.assert_allclose(res.scores[qi], vals, rtol=2e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 50), fill=st.sampled_from(["zero", "one", "scaled"]))
+def test_alignment_invariants(seed, fill):
+    """Filling never alters existing BM25 weights and never drops postings."""
+    corpus = _corpus(seed)
+    m_zero = corpus.merged("zero")
+    m_fill = corpus.merged(fill)
+    assert m_fill.nnz == m_zero.nnz
+    np.testing.assert_array_equal(m_fill.docids, m_zero.docids)
+    np.testing.assert_allclose(m_fill.w_l, m_zero.w_l)
+    existing = m_zero.w_b > 0
+    np.testing.assert_allclose(m_fill.w_b[existing], m_zero.w_b[existing])
+    assert np.all(m_fill.w_b[~existing] >= 0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_result_sorted_and_unique(seed):
+    corpus = _corpus(seed)
+    merged = corpus.merged("scaled")
+    index = build_index(merged, tile_size=128, pad_multiple=128)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, twolevel.fast(k=K))
+    for qi in range(len(corpus.queries)):
+        sc = res.scores[qi]
+        finite = sc[np.isfinite(sc)]
+        assert np.all(np.diff(finite) <= 1e-6), "scores must be descending"
+        ids = res.ids[qi]
+        ids = ids[ids >= 0]
+        assert len(set(ids.tolist())) == len(ids), "duplicate docids"

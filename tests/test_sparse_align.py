@@ -1,0 +1,110 @@
+"""Unit tests: sparse models, BM25, alignment/filling (paper Section 4.3)."""
+import numpy as np
+import pytest
+
+from repro.core.align import (FILL_METHODS, merge_models,
+                              misalignment_fraction, scaled_fill_ratio)
+from repro.core.bm25 import bm25_weight, build_bm25, one_fill_weight
+from repro.core.sparse import SparseModel, exhaustive_topk, from_coo, score_all
+
+
+def tiny_models():
+    # learned has postings (t0: d1, d3), (t1: d0); bm25 has (t0: d1), (t1: d2)
+    learned = from_coo(4, 2, np.array([0, 0, 1]), np.array([1, 3, 0]),
+                       np.array([2.0, 4.0, 1.0]))
+    bm25 = from_coo(4, 2, np.array([0, 1]), np.array([1, 2]),
+                    np.array([3.0, 5.0]))
+    return learned, bm25
+
+
+def test_from_coo_sorts_and_dedupes():
+    m = from_coo(8, 2, np.array([1, 0, 1, 1]), np.array([5, 2, 3, 5]),
+                 np.array([1.0, 2.0, 3.0, 9.0]))
+    assert m.nnz == 3
+    d, w = m.postings(1)
+    np.testing.assert_array_equal(d, [3, 5])
+    np.testing.assert_array_equal(w, [3.0, 1.0])  # first duplicate kept
+    m.validate()
+
+
+def test_score_all_and_topk():
+    m = from_coo(4, 2, np.array([0, 0, 1]), np.array([1, 3, 1]),
+                 np.array([2.0, 4.0, 1.0]))
+    s = score_all(m, np.array([0, 1]), np.array([1.0, 2.0]))
+    np.testing.assert_allclose(s, [0.0, 4.0, 0.0, 4.0])
+    ids, vals = exhaustive_topk(s, 2)
+    np.testing.assert_array_equal(ids, [1, 3])  # docid-asc tiebreak
+
+
+def test_bm25_monotone_tf_saturation():
+    idf = np.array([1.5], dtype=np.float32)
+    dl = np.array([10.0], dtype=np.float32)
+    w1 = bm25_weight(np.array([1.0]), dl, idf, 10.0)
+    w2 = bm25_weight(np.array([2.0]), dl, idf, 10.0)
+    w8 = bm25_weight(np.array([8.0]), dl, idf, 10.0)
+    assert w1 < w2 < w8
+    assert w8 < idf * (0.9 + 1.0)  # saturation bound: idf*(k1+1)
+    np.testing.assert_allclose(
+        one_fill_weight(dl, idf, 10.0), w1)
+
+
+def test_merge_zero_fill():
+    learned, bm25 = tiny_models()
+    mg = merge_models(learned, bm25, "zero")
+    assert mg.nnz == 4  # union: (0,d1),(0,d3),(1,d0),(1,d2)
+    d, wb, wl = mg.postings(0)
+    np.testing.assert_array_equal(d, [1, 3])
+    np.testing.assert_allclose(wb, [3.0, 0.0])  # d3 missing in BM25 -> 0
+    np.testing.assert_allclose(wl, [2.0, 4.0])
+    d, wb, wl = mg.postings(1)
+    np.testing.assert_array_equal(d, [0, 2])
+    np.testing.assert_allclose(wl, [1.0, 0.0])  # d2 BM25-only -> learned 0
+
+
+def test_merge_scaled_fill_ratio():
+    learned, bm25 = tiny_models()
+    ratio = scaled_fill_ratio(bm25, learned)
+    np.testing.assert_allclose(ratio, (8.0 / 2) / (7.0 / 3))
+    mg = merge_models(learned, bm25, "scaled")
+    d, wb, wl = mg.postings(0)
+    np.testing.assert_allclose(wb[1], ratio * 4.0)  # filled
+    np.testing.assert_allclose(wb[0], 3.0)          # existing untouched
+
+
+def test_merge_never_changes_existing_weights():
+    learned, bm25 = tiny_models()
+    stats_dl = np.full(4, 10.0, np.float32)
+    from repro.core.bm25 import Bm25Stats
+    stats = Bm25Stats(4, 2, stats_dl, np.array([1.0, 2.0], np.float32))
+    for fill in FILL_METHODS:
+        mg = merge_models(learned, bm25, fill, bm25_stats=stats)
+        d, wb, wl = mg.postings(0)
+        assert wb[list(d).index(1)] == 3.0
+        if fill != "zero":
+            assert wb[list(d).index(3)] > 0.0
+
+
+def test_misalignment_fraction():
+    learned, bm25 = tiny_models()
+    # learned postings: (0,1) present in bm25, (0,3) and (1,0) absent -> 2/3
+    np.testing.assert_allclose(
+        misalignment_fraction(learned, bm25), 2.0 / 3.0)
+
+
+def test_corpus_presets_have_expected_misalignment(small_corpus,
+                                                   aligned_corpus):
+    mis_s = misalignment_fraction(small_corpus.learned, small_corpus.bm25)
+    mis_u = misalignment_fraction(aligned_corpus.learned, aligned_corpus.bm25)
+    assert mis_s > 0.6, "splade-like preset should be heavily misaligned"
+    assert mis_u < 0.2, "unicoil-like preset should be mostly aligned"
+
+
+def test_build_bm25_weights_positive():
+    rng = np.random.default_rng(0)
+    terms = rng.integers(0, 16, 200)
+    docs = rng.integers(0, 64, 200)
+    tfs = 1 + rng.integers(0, 5, 200)
+    dl = np.maximum(np.bincount(docs, weights=tfs, minlength=64), 1.0)
+    model, stats = build_bm25(64, 16, terms, docs, tfs, dl)
+    assert model.weights.min() > 0
+    assert stats.idf.shape == (16,)

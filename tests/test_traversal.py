@@ -1,0 +1,168 @@
+"""Integration tests: tile-scan engine vs exhaustive scoring and the
+sequential numpy DAAT oracle; execution-mode and scheduling equivalences."""
+import numpy as np
+import pytest
+
+from repro.core import build_index, twolevel
+from repro.core.index import impact_doc_order
+from repro.core.metrics import evaluate_run
+from repro.core.oracle import daat_2gti, ranked_list
+from repro.core.traversal import retrieve_batched, retrieve_sequential
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    merged = small_corpus.merged("scaled")
+    index = build_index(merged, tile_size=256)
+    return small_corpus, merged, index
+
+
+def _q(corpus, qi):
+    return (corpus.queries[qi], corpus.q_weights_b[qi],
+            corpus.q_weights_l[qi])
+
+
+@pytest.mark.parametrize("gamma", [0.0, 0.3, 1.0])
+def test_rank_safe_config_equals_exhaustive(setup, gamma):
+    """alpha=beta=gamma: pruning is bound-exact for the combined score."""
+    corpus, merged, index = setup
+    p = twolevel.original(k=10, gamma=gamma)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p)
+    for qi in range(len(corpus.queries)):
+        ids_ref, vals_ref = ranked_list(merged, *_q(corpus, qi), gamma, 10)
+        np.testing.assert_allclose(res.scores[qi], vals_ref,
+                                   rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("schedule", ["docid", "impact"])
+def test_sequential_equals_batched(setup, schedule):
+    corpus, merged, index = setup
+    p = twolevel.fast(k=10).replace(schedule=schedule)
+    res_b = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, p)
+    res_s = retrieve_sequential(index, corpus.queries[:4],
+                                corpus.q_weights_b[:4],
+                                corpus.q_weights_l[:4], p)
+    np.testing.assert_array_equal(res_s.ids, res_b.ids[:4])
+    np.testing.assert_allclose(res_s.scores, res_b.scores[:4], rtol=1e-6)
+
+
+def test_impact_schedule_rank_safe_set_equality(setup):
+    """Visit order must not change results for a rank-safe config."""
+    corpus, merged, index = setup
+    p0 = twolevel.original(k=10, gamma=0.2)
+    p1 = p0.replace(schedule="impact")
+    r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p0)
+    r1 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p1)
+    np.testing.assert_allclose(r0.scores, r1.scores, rtol=1e-6)
+    assert all(set(a) == set(b) for a, b in zip(r0.ids, r1.ids))
+
+
+def test_doc_reordering_preserves_rank_safe_results(setup):
+    corpus, merged, index = setup
+    order = impact_doc_order(merged)
+    index_r = build_index(merged, tile_size=256, doc_order=order)
+    p = twolevel.original(k=10, gamma=0.2)
+    r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p)
+    r1 = retrieve_batched(index_r, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p)
+    np.testing.assert_allclose(r0.scores, r1.scores, rtol=1e-6)
+    assert all(set(a) == set(b) for a, b in zip(r0.ids, r1.ids))
+
+
+def test_gti_is_special_case_alpha_beta_one(setup):
+    corpus, merged, index = setup
+    gti = twolevel.gti(k=10, gamma=0.1)
+    manual = twolevel.TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.1, k=10)
+    r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, gti)
+    r1 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, manual)
+    np.testing.assert_array_equal(r0.ids, r1.ids)
+
+
+def test_engine_matches_oracle_relevance(setup):
+    """Tile engine prunes lazily vs per-doc DAAT: relevance metrics match."""
+    corpus, merged, index = setup
+    p = twolevel.fast(k=10)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p)
+    oracle_ids = np.array([daat_2gti(merged, *_q(corpus, qi), p)[0]
+                           for qi in range(len(corpus.queries))])
+    m_e = evaluate_run(res.ids, corpus.qrels, 10)
+    m_o = evaluate_run(oracle_ids, corpus.qrels, 10)
+    assert abs(m_e["mrr"] - m_o["mrr"]) < 0.05
+    assert m_e["recall"] >= m_o["recall"] - 0.05
+
+
+def test_overestimation_prunes_more_and_degrades(setup):
+    """Table 3: threshold over-estimation trades relevance for pruning."""
+    corpus, merged, index = setup
+    base = twolevel.original(k=10, gamma=0.0)
+    over = base.replace(threshold_factor=1.5)
+    r_base = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                              corpus.q_weights_l, base)
+    r_over = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                              corpus.q_weights_l, over)
+    assert (r_over.stats["docs_survived"].mean()
+            <= r_base.stats["docs_survived"].mean())
+    m_b = evaluate_run(r_base.ids, corpus.qrels, 10)
+    m_o = evaluate_run(r_over.ids, corpus.qrels, 10)
+    assert m_o["recall"] <= m_b["recall"] + 1e-9
+
+
+def test_guided_prunes_more_than_unguided(small_corpus):
+    """BM25 guidance must create skipping the learned weights cannot.
+
+    Uses the zero-filled index: there BM25's skewed weight distribution is
+    undiluted, the regime where the paper observes GT/GTI's pruning power.
+    """
+    corpus = small_corpus
+    index = build_index(corpus.merged("zero"), tile_size=256)
+    r_org = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, twolevel.original(k=10))
+    r_gti = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, twolevel.gti(k=10))
+    assert (r_gti.stats["docs_survived"].mean()
+            < r_org.stats["docs_survived"].mean())
+
+
+def test_stats_are_consistent(setup):
+    corpus, merged, index = setup
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, twolevel.fast(k=10))
+    s = res.stats
+    assert np.all(s["docs_survived"] <= s["docs_present"])
+    assert np.all(s["docs_frozen"] <= s["docs_survived"])
+    assert np.all(s["tiles_visited"] <= s["n_tiles"])
+
+
+def test_k_larger_than_matches(setup):
+    corpus, merged, index = setup
+    p = twolevel.fast(k=500)
+    res = retrieve_batched(index, corpus.queries[:2], corpus.q_weights_b[:2],
+                           corpus.q_weights_l[:2], p)
+    assert res.ids.shape == (2, 500)
+    # padded tail exists but scored entries are sorted desc
+    sc = res.scores[0]
+    finite = sc[np.isfinite(sc)]
+    assert np.all(np.diff(finite) <= 1e-6)
+
+
+def test_kernel_path_matches_jnp_path(setup):
+    """Engine with the fused Pallas guided_score kernel (interpret mode)
+    must match the pure-jnp tile scorer exactly."""
+    corpus, merged, index = setup
+    p = twolevel.fast(k=10)
+    r_jnp = retrieve_batched(index, corpus.queries[:4],
+                             corpus.q_weights_b[:4],
+                             corpus.q_weights_l[:4], p)
+    r_ker = retrieve_batched(index, corpus.queries[:4],
+                             corpus.q_weights_b[:4],
+                             corpus.q_weights_l[:4], p, use_kernel=True)
+    np.testing.assert_array_equal(r_jnp.ids, r_ker.ids)
+    np.testing.assert_allclose(r_jnp.scores, r_ker.scores, rtol=1e-6)
