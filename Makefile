@@ -1,0 +1,19 @@
+# Test lanes. `make test` is the pre-review gate: the fast lane first
+# (collection regressions surface in seconds), then the slow lane
+# (subprocess dry-run compiles, multi-device collectives).
+PY      := python
+PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
+
+.PHONY: test test-fast test-slow tier1
+
+test: test-fast test-slow
+
+test-fast:
+	$(PYTEST) -m "not slow"
+
+test-slow:
+	$(PYTEST) -m slow
+
+# The exact tier-1 command from ROADMAP.md (everything, fail-fast).
+tier1:
+	$(PYTEST) -x

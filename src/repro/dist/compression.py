@@ -1,0 +1,94 @@
+"""Gradient compression with error feedback.
+
+Scheme (per leaf): the error-corrected gradient ``g + err`` is split into
+(1) its top-k largest-magnitude coordinates, transmitted exactly in fp32
+(value + index), and (2) the remainder, transmitted as per-tensor-scaled
+int8. The new error-feedback state is exactly the int8 quantization
+residual, so it is bounded by ``scale / 2`` at *every* step — unlike pure
+top-k sparsification, whose residual for small coordinates grows with the
+send interval, the cumulative transmitted update here tracks the cumulative
+true gradient to within one quantization step. That bound is what
+``test_error_feedback_mean_error_vanishes`` pins down, and it is why the
+compressed trainer converges at an unchanged rate.
+
+All of ``compress_with_feedback`` is jit-compatible (static shapes, lax
+top_k) — the trainer calls it inside its jitted step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    topk_fraction: float = 1.0 / 64.0   # exact-fp32 heavy hitters per leaf
+    residual_bits: int = 8              # quantized tail precision
+    index_bits: int = 32                # accounting: bits per top-k index
+
+
+DEFAULT = CompressionConfig()
+
+
+def _leaf_k(n: int, cfg: CompressionConfig) -> int:
+    return max(1, int(n * cfg.topk_fraction))
+
+
+def init_error_feedback(params):
+    """Zero fp32 error accumulators shaped like the gradient pytree."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_sparsify(g: jax.Array, k: int) -> jax.Array:
+    """Dense tensor with everything but the k largest-|.| entries zeroed."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return (flat * mask).reshape(g.shape).astype(g.dtype)
+
+
+def _compress_leaf(g, err, cfg: CompressionConfig):
+    flat = g.reshape(-1).astype(jnp.float32) + err.reshape(-1)
+    k = _leaf_k(flat.size, cfg)
+    exact = topk_sparsify(flat, k)
+    rest = flat - exact
+    qmax = float(2 ** (cfg.residual_bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(rest)) / qmax, 1e-12)
+    quant = jnp.round(rest / scale) * scale
+    sent = (exact + quant).astype(g.dtype)   # what is actually transmitted
+    # feed back vs the *cast* value so low-precision rounding (bf16 grads)
+    # is corrected too, keeping the residual bound at scale/2 + cast ulp
+    new_err = flat - sent.astype(jnp.float32)
+    return sent.reshape(g.shape), new_err.reshape(g.shape)
+
+
+def compress_with_feedback(grads, err, cfg: CompressionConfig = DEFAULT):
+    """Returns (transmitted_grads, new_error_feedback), same pytrees."""
+    pairs = jax.tree_util.tree_map(
+        lambda g, e: _compress_leaf(g, e, cfg), grads, err)
+    sent = jax.tree_util.tree_map(
+        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(
+        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_err
+
+
+def compression_ratio(grads, cfg: CompressionConfig = DEFAULT) -> float:
+    """Dense fp32 bits / transmitted bits for one gradient pytree.
+
+    Transmitted per leaf: k fp32 values + k indices + (n - k) int8 residual
+    entries + one fp32 scale.
+    """
+    dense_bits = 0
+    sent_bits = 0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        k = _leaf_k(n, cfg)
+        dense_bits += n * 32
+        sent_bits += (k * (32 + cfg.index_bits)
+                      + (n - k) * cfg.residual_bits + 32)
+    return dense_bits / max(sent_bits, 1)

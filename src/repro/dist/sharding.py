@@ -1,0 +1,234 @@
+"""Sharding policy: (family, config, mesh, variant) -> NamedSharding pytrees.
+
+Two variants are understood everywhere:
+
+- ``"tp"``   — tensor parallelism on the ``model`` axis for weights and
+  activations, data parallelism on the ``data`` (and ``pod``) axes for the
+  batch. The paper-era default for every dry-run cell.
+- ``"fsdp"`` — ZeRO-3 style: parameters and optimizer state sharded over
+  *all* mesh axes, activations sharded on batch only, weights all-gathered
+  in compute dtype per layer (``Rules.gather_weights``).
+
+Every rule is divisibility-guarded: a dimension is only sharded when the
+axis size divides it, so the same policy lowers on the 8-device subprocess
+mesh (4x2) and the 512-device production meshes (16x16, 2x16x16) without
+per-mesh special cases. Anything unrecognized replicates — GSPMD then
+propagates a layout, which is always correct, merely not always optimal.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# single source of truth for the mesh-axis policy (which axes carry DP,
+# what the model axis is called) — shared with the launch layer
+from ..launch.mesh import dp_axes as _dp_axes, model_axis as _model_axis
+
+
+def _axes_size(mesh, axes) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes)) if axes else 1
+
+
+def _rep(ndim: int) -> P:
+    return P(*([None] * ndim))
+
+
+def _shard_dim(shape, dim, axes) -> P:
+    spec = [None] * len(shape)
+    spec[dim] = axes
+    return P(*spec)
+
+
+def _largest_divisible_dim(shape, size: int, *, reverse: bool = True):
+    """Dim index with the largest extent divisible by ``size`` (ties go to
+    the trailing dim when ``reverse``), or None."""
+    best = None
+    dims = range(len(shape) - 1, -1, -1) if reverse else range(len(shape))
+    for d in dims:
+        if shape[d] % size == 0 and shape[d] > size:
+            if best is None or shape[d] > shape[best]:
+                best = d
+    return best
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+def activation_rules(mesh, variant: str = "tp"):
+    """Logical-axis rules (``models.transformer.Rules``) for one mesh.
+
+    tp:   batch -> DP axes, heads/vocab -> model axis.
+    fsdp: batch -> DP axes only; weights are gathered per layer in compute
+          dtype (no TP activation all-reduces).
+    """
+    from ..models.transformer import Rules
+    dp = _dp_axes(mesh)
+    batch = dp if dp else None
+    dp_size = _axes_size(mesh, dp)
+    if variant == "fsdp":
+        return Rules(batch=batch, heads=None, kv_seq=None, vocab=None,
+                     dp_size=dp_size, gather_weights=True)
+    tp = _model_axis(mesh)
+    return Rules(batch=batch, heads=tp, kv_seq=None, vocab=tp,
+                 dp_size=dp_size, gather_weights=False)
+
+
+# --------------------------------------------------------------------------
+# parameters / optimizer state
+# --------------------------------------------------------------------------
+
+# Leaf-name driven TP placements for the transformer stack. Projections
+# shard their head/ffn (output) dim; the return projections shard the
+# contraction dim, so each matmul pair needs a single all-reduce
+# (Megatron-style column/row split). MoE expert stacks shard the expert
+# dim (EP). Stacked-layer leaves carry a leading L dim that stays
+# replicated.
+_LM_TP_OUT = ("wq", "wk", "wv", "w_gate", "w_up", "router")
+_LM_TP_IN = ("wo", "w_down")
+
+
+def _lm_param_spec(name: str, shape, tp: str, tp_size: int) -> P:
+    nd = len(shape)
+    if nd <= 1:
+        return _rep(nd)
+    if name in ("embed", "pos_embed"):
+        # [V, D]: shard the vocab/position rows (Rules.vocab == model axis)
+        return (_shard_dim(shape, 0, tp) if shape[0] % tp_size == 0
+                else _rep(nd))
+    if name == "lm_head":
+        return (_shard_dim(shape, 1, tp) if shape[1] % tp_size == 0
+                else _rep(nd))
+    if name in ("w_gate", "w_up", "w_down") and nd == 4:
+        # MoE stacks [L, E, D, F]: expert-parallel on the model axis
+        return (_shard_dim(shape, 1, tp) if shape[1] % tp_size == 0
+                else _rep(nd))
+    if name in _LM_TP_OUT:
+        return (_shard_dim(shape, nd - 1, tp)
+                if shape[-1] % tp_size == 0 else _rep(nd))
+    if name in _LM_TP_IN:
+        return (_shard_dim(shape, nd - 2, tp)
+                if shape[-2] % tp_size == 0 else _rep(nd))
+    return _rep(nd)
+
+
+# Embedding tables dominate recsys parameter bytes; their row dim is
+# sharded on the model axis (model-parallel embeddings). MLP weights
+# shard their output dim when it divides.
+_RECSYS_TABLE_ROWS = 8192  # row count above which dim 0 is table-like
+
+
+def _recsys_param_spec(name: str, shape, tp: str, tp_size: int) -> P:
+    nd = len(shape)
+    if nd <= 1:
+        return _rep(nd)
+    if shape[0] >= _RECSYS_TABLE_ROWS and shape[0] % tp_size == 0:
+        return _shard_dim(shape, 0, tp)
+    if name == "w" and shape[-1] % tp_size == 0 and shape[-1] > tp_size:
+        return _shard_dim(shape, nd - 1, tp)
+    return _lm_param_spec(name, shape, tp, tp_size)  # bert4rec reuses the LM
+
+
+def param_shardings(family: str, cfg, mesh, params, variant: str = "tp"):
+    """NamedSharding pytree matching ``params`` (arrays or SDS leaves).
+
+    tp: family-aware TP placement (see above); gnn replicates — SchNet is
+    tiny and rides on pure DP. fsdp: every leaf shards its largest
+    divisible dim across all mesh axes (two-axis ZeRO-3 partitioning).
+    """
+    all_axes = tuple(mesh.axis_names)
+    all_size = _axes_size(mesh, all_axes)
+    tp = _model_axis(mesh)
+    tp_size = mesh.shape[tp] if tp else 1
+
+    def leaf_spec(path, leaf) -> P:
+        shape = leaf.shape
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        if variant == "fsdp":
+            d = _largest_divisible_dim(shape, all_size)
+            return _shard_dim(shape, d, all_axes) if d is not None \
+                else _rep(len(shape))
+        if tp is None or family == "gnn":
+            return _rep(len(shape))
+        if family == "lm":
+            return _lm_param_spec(name, shape, tp, tp_size)
+        return _recsys_param_spec(name, shape, tp, tp_size)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, leaf_spec(path, leaf)), params)
+
+
+def opt_shardings(p_sh):
+    """AdamW state shardings from param shardings: moments inherit the
+    param layout (fp32 copies live where the master param lives); the step
+    counter replicates."""
+    mesh = jax.tree_util.tree_leaves(p_sh)[0].mesh
+    return {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+
+
+# --------------------------------------------------------------------------
+# inputs
+# --------------------------------------------------------------------------
+
+# Inputs whose leading dim is a candidate/catalog axis: sharded over the
+# whole mesh (the retrieval cells score 1M candidates across all devices).
+_CANDIDATE_KEYS = ("cand_ids", "cand_emb", "shortlist", "neg_items",
+                   "neg_logq")
+
+
+def input_shardings(family: str, cfg, mesh, spec: dict,
+                    variant: str = "tp") -> dict:
+    """Per-input NamedSharding pytrees for one ``input_specs`` dict.
+
+    Batch-like leading dims shard over the DP axes; candidate axes shard
+    over every mesh axis; KV caches shard their batch dim (dim 1 of
+    [L, B, S, Hkv, Dh]); scalars and non-divisible dims replicate.
+    """
+    dp = _dp_axes(mesh)
+    dp_size = _axes_size(mesh, dp)
+    all_axes = tuple(mesh.axis_names)
+    all_size = _axes_size(mesh, all_axes)
+
+    def batch_leaf(leaf) -> NamedSharding:
+        shape = leaf.shape
+        if len(shape) and dp and shape[0] % dp_size == 0 and shape[0] > 1:
+            return NamedSharding(mesh, _shard_dim(shape, 0, dp))
+        return NamedSharding(mesh, _rep(len(shape)))
+
+    def cand_leaf(leaf) -> NamedSharding:
+        shape = leaf.shape
+        if len(shape) and shape[0] % all_size == 0 and shape[0] > all_size:
+            return NamedSharding(mesh, _shard_dim(shape, 0, all_axes))
+        return batch_leaf(leaf)
+
+    def cache_leaf(leaf) -> NamedSharding:
+        shape = leaf.shape  # [L, B, S, Hkv, Dh] or [L, B, S, Hkv]
+        if len(shape) >= 2 and dp and shape[1] % dp_size == 0:
+            return NamedSharding(mesh, _shard_dim(shape, 1, dp))
+        return NamedSharding(mesh, _rep(len(shape)))
+
+    def dispatch(path, leaf) -> NamedSharding:
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        if name in _CANDIDATE_KEYS:
+            return cand_leaf(leaf)
+        return batch_leaf(leaf)
+
+    out = {}
+    for key, sub in spec["inputs"].items():
+        if key == "cache":
+            out[key] = jax.tree_util.tree_map(cache_leaf, sub)
+        elif key in _CANDIDATE_KEYS:
+            out[key] = jax.tree_util.tree_map(cand_leaf, sub)
+        else:
+            out[key] = jax.tree_util.tree_map_with_path(dispatch, sub)
+    return out

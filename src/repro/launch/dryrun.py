@@ -1,7 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
 # ^ MUST precede every other import: jax locks the device count at first
-# init. Do NOT replicate this in conftest/pyproject — tests see 1 device.
+# init. Merged into any pre-set XLA_FLAGS so a caller that already forces
+# a device count (the 8-device subprocess test) keeps its own, while
+# unrelated flags don't lose the 512-device emulation. Do NOT replicate
+# this in conftest/pyproject — tests see 1 device.
 
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -28,6 +35,15 @@ DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def cost_stats(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions — older
+    jaxlibs return ``[dict]`` (one per computation), newer return a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def collective_bytes(hlo_text: str) -> dict:
@@ -143,7 +159,7 @@ def run_cell(arch_id: str, shape: str, mesh, mesh_name: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_stats(compiled)
             coll = collective_bytes(compiled.as_text())
             # Loop-aware cost extrapolation: compile depth-1 and depth-2
             # variants; per-layer cost = f(2) - f(1); total = f(1)+(L-1)*per.
@@ -156,7 +172,7 @@ def run_cell(arch_id: str, shape: str, mesh, mesh_name: str,
                     j2, a2 = lower_cell(arch_id, shape, mesh, depth=dd,
                                         variant=variant)
                     c2 = j2.lower(*a2).compile()
-                    cost2 = c2.cost_analysis()
+                    cost2 = cost_stats(c2)
                     probes.append({
                         "flops": float(cost2.get("flops", 0.0)),
                         "bytes": float(cost2.get("bytes accessed", 0.0)),

@@ -54,6 +54,17 @@ class RetrievalServer:
         req.t_enqueue = now
         self.pending.append(req)
 
+    def _truncate(self, r: Request) -> np.ndarray:
+        """Indices of the ``pad_terms`` terms to keep. Over-long queries
+        drop their *lowest-impact* terms — ranked by the gamma-combined
+        query weight the engine scores with — not the trailing ones."""
+        if len(r.terms) <= self.cfg.pad_terms:
+            return np.arange(len(r.terms))
+        g = self.params.gamma
+        impact = g * np.asarray(r.qw_b) + (1.0 - g) * np.asarray(r.qw_l)
+        keep = np.argsort(-impact, kind="stable")[:self.cfg.pad_terms]
+        return np.sort(keep)  # preserve original term order
+
     def _flush(self) -> None:
         batch, self.pending = (self.pending[:self.cfg.max_batch],
                                self.pending[self.cfg.max_batch:])
@@ -62,10 +73,11 @@ class RetrievalServer:
         qw_b = np.zeros((n, p), np.float32)
         qw_l = np.zeros((n, p), np.float32)
         for i, r in enumerate(batch):
-            k = min(len(r.terms), p)
-            terms[i, :k] = r.terms[:k]
-            qw_b[i, :k] = r.qw_b[:k]
-            qw_l[i, :k] = r.qw_l[:k]
+            keep = self._truncate(r)
+            k = len(keep)
+            terms[i, :k] = np.asarray(r.terms)[keep]
+            qw_b[i, :k] = np.asarray(r.qw_b)[keep]
+            qw_l[i, :k] = np.asarray(r.qw_l)[keep]
         res = retrieve_batched(self.index, terms, qw_b, qw_l, self.params)
         done = time.perf_counter()
         for i, r in enumerate(batch):

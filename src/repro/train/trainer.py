@@ -17,9 +17,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..dist.compression import (compress_with_feedback, init_error_feedback)
+from ..dist.compression import (compress_with_feedback, compression_ratio,
+                                init_error_feedback)
 from . import checkpoint
-from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
 
 
 @dataclasses.dataclass
@@ -86,6 +87,7 @@ class Trainer:
             new_state = {"params": params, "opt": opt}
             if use_comp:
                 new_state["err"] = err
+                metrics["err_norm"] = global_norm(err)
             metrics["loss"] = loss
             return new_state, metrics
 
@@ -112,6 +114,9 @@ class Trainer:
             state = self.init_state(seed)
             start_step = 0
         log_path = self.out / "metrics.jsonl"
+        # shape-only constant (grads are param-shaped by construction)
+        comp_ratio = (round(compression_ratio(state["params"]), 2)
+                      if self.cfg.grad_compression else None)
         losses = []
         with log_path.open("a") as log:
             for step in range(start_step, self.cfg.total_steps):
@@ -129,6 +134,9 @@ class Trainer:
                            "grad_norm": float(metrics["grad_norm"]),
                            "lr": float(metrics["lr"]),
                            "sec": time.perf_counter() - t0}
+                    if "err_norm" in metrics:
+                        rec["err_norm"] = float(metrics["err_norm"])
+                        rec["compression_ratio"] = comp_ratio
                     log.write(json.dumps(rec) + "\n")
                     log.flush()
                 next_step = step + 1

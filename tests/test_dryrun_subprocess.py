@@ -13,8 +13,9 @@ SCRIPT = textwrap.dedent("""
     import json
     import jax
     from repro.launch.mesh import make_mesh, dp_axes
-    from repro.launch.dryrun import lower_cell, collective_bytes
+    from repro.launch.dryrun import collective_bytes, cost_stats, lower_cell
 
+    assert jax.device_count() == 8  # dryrun's setdefault kept our count
     mesh = make_mesh(dp=4, tp=2)
     assert mesh.devices.size == 8
     assert dp_axes(mesh) == ("data",)
@@ -25,7 +26,7 @@ SCRIPT = textwrap.dedent("""
         with mesh:
             jitted, args = lower_cell(arch, shape, mesh)
             compiled = jitted.lower(*args).compile()
-            cost = compiled.cost_analysis()
+            cost = cost_stats(compiled)
             coll = collective_bytes(compiled.as_text())
             out[f"{arch}/{shape}"] = {
                 "flops": float(cost.get("flops", -1)),

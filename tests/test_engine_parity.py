@@ -1,0 +1,91 @@
+"""Cross-validation: the batched tile-scan engine (pure-jnp and Pallas
+guided_score kernel paths) against the sequential numpy DAAT oracle's Q_Rk.
+
+Rank-safe configurations (alpha=beta=gamma) must agree exactly — same ids,
+same scores — because pruning is bound-exact for the combined score and the
+tiebreak (docid ascending) matches. Guided configurations are compared on
+the returned score vector (both traversals keep every doc whose RankScore
+makes the final queue; the oracle freezes docs eagerly per-document while
+the tile engine freezes lazily per-tile, so ids may differ only in the tail
+where scores tie)."""
+import numpy as np
+import pytest
+
+from repro.core import build_index, twolevel
+from repro.core.oracle import daat_2gti
+from repro.core.traversal import retrieve_batched
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    merged = small_corpus.merged("scaled")
+    index = build_index(merged, tile_size=256)
+    return small_corpus, merged, index
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp", "pallas_kernel"])
+@pytest.mark.parametrize("gamma", [0.0, 0.05, 0.3, 1.0])
+def test_rank_safe_engine_matches_oracle_qrk(setup, use_kernel, gamma):
+    corpus, merged, index = setup
+    p = twolevel.original(k=K, gamma=gamma)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p, use_kernel=use_kernel)
+    for qi in range(len(corpus.queries)):
+        ids_o, vals_o, _ = daat_2gti(merged, corpus.queries[qi],
+                                     corpus.q_weights_b[qi],
+                                     corpus.q_weights_l[qi], p)
+        valid = ids_o >= 0
+        np.testing.assert_allclose(res.scores[qi][valid], vals_o[valid],
+                                   rtol=2e-4, atol=1e-3)
+        # ids must match except where adjacent scores tie (order of equal
+        # scores is implementation-defined between the two traversals)
+        eng, orc = res.ids[qi][valid], ids_o[valid]
+        mism = eng != orc
+        if mism.any():
+            v = vals_o[valid]
+            tied = np.zeros_like(mism)
+            tied[1:] |= np.abs(np.diff(v)) < 1e-3
+            tied[:-1] |= np.abs(np.diff(v)) < 1e-3
+            assert mism[~tied].sum() == 0, (
+                f"q{qi}: untied id mismatch engine={eng} oracle={orc}")
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp", "pallas_kernel"])
+@pytest.mark.parametrize("preset", ["fast", "accurate", "gti"])
+def test_guided_engine_scores_match_oracle_qrk(setup, use_kernel, preset):
+    """Unsafe configs: the tile engine freezes docs lazily per-tile while
+    the oracle freezes eagerly per-doc, so only the queue *boundary* may
+    hold different docs — the head of Q_Rk must agree exactly and the tail
+    scores must stay within 2% (either traversal may keep the slightly
+    better boundary doc)."""
+    corpus, merged, index = setup
+    p = getattr(twolevel, preset)(k=K)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p, use_kernel=use_kernel)
+    for qi in range(len(corpus.queries)):
+        ids_o, vals_o, _ = daat_2gti(merged, corpus.queries[qi],
+                                     corpus.q_weights_b[qi],
+                                     corpus.q_weights_l[qi], p)
+        valid = ids_o >= 0
+        eng, orc = res.scores[qi][valid], vals_o[valid]
+        np.testing.assert_allclose(eng[:K - 2], orc[:K - 2],
+                                   rtol=2e-4, atol=1e-3)
+        np.testing.assert_allclose(eng[K - 2:], orc[K - 2:],
+                                   rtol=2e-2, atol=1e-2)
+
+
+def test_kernel_and_jnp_paths_identical_across_presets(setup):
+    """Both execution paths of retrieve_batched are the same algorithm."""
+    corpus, merged, index = setup
+    for p in (twolevel.fast(k=K), twolevel.original(k=K, gamma=0.2),
+              twolevel.fast(k=K).replace(bound_mode="tile")):
+        r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                              corpus.q_weights_l, p)
+        r1 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                              corpus.q_weights_l, p, use_kernel=True)
+        np.testing.assert_array_equal(r0.ids, r1.ids)
+        np.testing.assert_allclose(r0.scores, r1.scores, rtol=1e-6)

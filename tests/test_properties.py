@@ -8,7 +8,10 @@ Plus structural invariants: threshold monotonicity, queue ordering.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[dev]); skipping, not failing")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import build_index, twolevel
 from repro.core.oracle import daat_2gti, ranked_list, score_all_merged, two_stage

@@ -1,0 +1,103 @@
+"""Serving-engine edge cases: over-long queries (term truncation), partial
+final batches flushing on drain, and zero batching delay accounting."""
+import numpy as np
+import pytest
+
+from repro.core import build_index, twolevel
+from repro.serve import Request, RetrievalServer, ServerConfig
+
+
+@pytest.fixture(scope="module")
+def served(small_corpus):
+    index = build_index(small_corpus.merged("scaled"), tile_size=256)
+    return small_corpus, index
+
+
+def _request(corpus, qi):
+    return Request(corpus.queries[qi], corpus.q_weights_b[qi],
+                   corpus.q_weights_l[qi])
+
+
+def test_overlong_query_truncates_to_lowest_impact_terms(served):
+    """A request with more terms than pad_terms keeps the highest
+    gamma-combined-weight terms, and still returns a full result."""
+    corpus, index = served
+    params = twolevel.fast(k=10)
+    pad = 4
+    srv = RetrievalServer(index, params, ServerConfig(max_batch=2,
+                                                      max_wait_ms=0.1,
+                                                      pad_terms=pad))
+    # stitch two real queries into one 10-term request with hand-picked
+    # weights: qw_b == qw_l makes the gamma-combined impact equal the raw
+    # weight for ANY gamma, so the expected kept set is known a priori
+    # (indices 1, 3, 6, 8) without re-deriving the production formula
+    terms = np.concatenate([corpus.queries[0], corpus.queries[1]])
+    w = np.array([.1, .9, .2, .8, .3, .4, .7, .05, .6, .15], np.float32)
+    long_req = Request(terms, w.copy(), w.copy())
+    srv.submit(long_req, 0.0)
+    srv._flush()
+    assert long_req.ids is not None and len(long_req.ids) == 10
+    keep = np.array([1, 3, 6, 8])  # the four largest weights, in order
+    short_req = Request(terms[keep], w[keep], w[keep])
+    srv2 = RetrievalServer(index, params, ServerConfig(pad_terms=pad))
+    srv2.submit(short_req, 0.0)
+    srv2._flush()
+    np.testing.assert_array_equal(long_req.ids, short_req.ids)
+    np.testing.assert_allclose(long_req.scores, short_req.scores)
+
+
+def test_truncation_prefers_high_weight_over_leading_terms(served):
+    """The kept set is weight-ranked, not positional: put the heavy terms
+    last and check they survive."""
+    corpus, index = served
+    params = twolevel.fast(k=10)
+    pad = 2
+    nq = len(corpus.queries[0])
+    terms = corpus.queries[0].copy()
+    qw_b = np.ones(nq, np.float32) * 0.01
+    qw_l = np.ones(nq, np.float32) * 0.01
+    qw_b[-2:] = 5.0
+    qw_l[-2:] = 5.0
+    srv = RetrievalServer(index, params, ServerConfig(pad_terms=pad))
+    keep = srv._truncate(Request(terms, qw_b, qw_l))
+    assert list(keep) == [nq - 2, nq - 1]
+
+
+def test_partial_final_batch_flushes_on_drain(served):
+    """Fewer pending requests than max_batch must still complete once the
+    arrival stream ends (no stranded tail)."""
+    corpus, index = served
+    srv = RetrievalServer(index, twolevel.fast(k=10),
+                          ServerConfig(max_batch=8, max_wait_ms=50.0))
+    reqs = [_request(corpus, i % len(corpus.queries)) for i in range(3)]
+    stats = srv.run_workload(reqs, qps=2000.0)
+    assert stats["n"] == 3
+    assert len(srv.completed) == 3
+    assert all(r.ids is not None and r.t_done >= r.t_enqueue
+               for r in srv.completed)
+
+
+def test_multiple_partial_batches_drain_in_order(served):
+    """max_batch=1 forces one flush per request; results keep arrival
+    order and every latency is positive."""
+    corpus, index = served
+    srv = RetrievalServer(index, twolevel.fast(k=10),
+                          ServerConfig(max_batch=1, max_wait_ms=0.0))
+    reqs = [_request(corpus, i) for i in range(5)]
+    stats = srv.run_workload(reqs, qps=1000.0)
+    assert stats["n"] == 5
+    lat = [r.latency_ms for r in srv.completed]
+    assert all(v > 0 for v in lat)
+    assert stats["p99_ms"] >= stats["p50_ms"]
+
+
+def test_empty_padded_request_is_harmless(served):
+    """All-zero weights (fully padded request) completes without NaNs."""
+    corpus, index = served
+    srv = RetrievalServer(index, twolevel.fast(k=10), ServerConfig())
+    req = Request(np.zeros(4, np.int32), np.zeros(4, np.float32),
+                  np.zeros(4, np.float32))
+    srv.submit(req, 0.0)
+    srv._flush()
+    assert req.ids is not None
+    assert not np.isnan(req.scores).any()  # -inf padding ok, NaN never
