@@ -4,7 +4,7 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow tier1
+.PHONY: test test-fast test-slow tier1 bench-smoke
 
 test: test-fast test-slow
 
@@ -17,3 +17,7 @@ test-slow:
 # The exact tier-1 command from ROADMAP.md (everything, fail-fast).
 tier1:
 	$(PYTEST) -x
+
+# Sharded-retrieval scaling benchmark on the 1-device mesh (seconds, CI).
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.sharded_scaling --smoke

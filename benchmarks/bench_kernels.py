@@ -37,7 +37,7 @@ def run(out) -> None:
     wl = jnp.asarray(rng.random((nq, p)), jnp.float32)
     ess = jnp.asarray(rng.random(nq) < 0.5, jnp.float32)
     pb = jnp.asarray(np.cumsum(rng.random(nq)), jnp.float32)
-    args = (offs, wb, wl, ess, pb, jnp.float32(1.0), jnp.float32(2.0),
+    args = (offs, wb, wl, ess, pb, jnp.float32(2.0),
             jnp.float32(1.0), jnp.float32(0.3), jnp.float32(0.05))
     t_k = _time(lambda *a: guided_score_tile(*a, tile_size=s, block_s=512),
                 *args)

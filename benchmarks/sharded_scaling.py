@@ -1,0 +1,100 @@
+"""Sharded-retrieval scaling: shard counts {1,2,4,8}, throughput + skip
+tables + single-device parity.
+
+Standalone entry fakes 8 host devices *before* jax initializes so every
+shard count runs the real ``shard_map`` + collective-merge path:
+
+    PYTHONPATH=src python -m benchmarks.sharded_scaling [--smoke]
+
+``--smoke`` is the CI lane (``make bench-smoke``): tiny corpus, 1-device
+mesh, one rep. Via ``benchmarks.run`` the module uses however many devices
+already exist and falls back to the vmap emulation path (bit-identical
+math, no cross-device traffic) for larger shard counts.
+
+Rows: ``sharded/<method>/s<shards>_e<exchange>`` with per-query latency,
+throughput, mean tiles visited per shard, and the max |score delta| vs
+single-device ``retrieve_batched`` (0 for rank-safe configs by
+construction; the parity *tests* pin bit-identity).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __name__ == "__main__" and "--smoke" not in sys.argv:
+    _prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _prev:
+        os.environ["XLA_FLAGS"] = (
+            f"{_prev} --xla_force_host_platform_device_count=8".strip())
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import build_index, twolevel  # noqa: E402
+from repro.core.shard_plan import shard_index  # noqa: E402
+from repro.core.traversal import retrieve_batched  # noqa: E402
+from repro.data import make_corpus  # noqa: E402
+from repro.serve.sharded import (make_shard_mesh,  # noqa: E402
+                                 shard_retrieve_batched)
+
+try:  # package-relative when driven by benchmarks.run
+    from .common import emit
+except ImportError:  # python -m benchmarks.sharded_scaling
+    from benchmarks.common import emit
+
+
+def run(out, smoke: bool = False) -> None:
+    n_docs = 4096 if smoke else 32768
+    corpus = make_corpus("splade_like", n_docs=n_docs, n_terms=4096,
+                         n_queries=32, seed=0)
+    index = build_index(corpus.merged("scaled"), tile_size=512)
+    q = (corpus.queries, corpus.q_weights_b, corpus.q_weights_l)
+    b = len(corpus.queries)
+    n_dev = len(jax.devices())
+    shard_counts = (1,) if smoke else (1, 2, 4, 8)
+    exchanges = (0,) if smoke else (0, 2)
+    reps = 1 if smoke else 3
+    methods = [("fast_docid", twolevel.fast(k=10))]
+    if not smoke:
+        methods.append(("fast_impact",
+                        twolevel.fast(k=10).replace(schedule="impact")))
+    for name, params in methods:
+        ref = retrieve_batched(index, *q, params)
+        for ns in shard_counts:
+            sharded = shard_index(index, ns)
+            mesh = make_shard_mesh(ns) if ns <= n_dev else None
+            for exch in exchanges:
+                def call():
+                    return shard_retrieve_batched(
+                        sharded, *q, params, mesh=mesh, exchange_every=exch)
+                res = call()  # compile outside the timed region
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    res = call()
+                dt = (time.perf_counter() - t0) / reps
+                per_shard = res.stats["shard_tiles_visited"].mean(0)
+                delta = float(np.abs(res.scores - ref.scores).max())
+                out(emit(
+                    f"sharded/{name}/s{ns}_e{exch}", dt * 1e3 / b,
+                    {"qps": b / dt,
+                     "path": "mesh" if mesh is not None else "emu",
+                     "tiles_per_shard": "|".join(
+                         f"{v:.1f}" for v in per_shard),
+                     "tiles_total": float(res.stats["tiles_visited"].mean()),
+                     "score_delta_vs_1dev": delta,
+                     "ids_equal": bool(np.array_equal(res.ids, ref.ids))}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus, 1-device mesh, single rep (CI lane)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(print, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

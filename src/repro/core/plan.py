@@ -1,0 +1,112 @@
+"""Query planner for the 2GTI tile-scan engine — the planner/executor contract.
+
+One planner, three executors. Every traversal mode used to carry its own
+copy of the sort/bound/skip logic (the batched vmap engine, the sequential
+host loop, and the Pallas-kernel wrapper each re-derived term order, tile
+upper bounds and the essential partition). This module is now the single
+copy; executors only gather, scatter-accumulate, and merge queues.
+
+Planner responsibilities (this module):
+  - **term ordering** — ``plan_query`` presorts query terms ascending by
+    alpha-combined list maxima and packages the weighted list maxima
+    (``sig_b``/``sig_l``) alongside, as a :class:`QueryPlan`;
+  - **tile scheduling** — ``tile_upper_bounds`` gives the per-tile
+    alpha-combined global upper bound (the tile-skip test operand) and
+    ``tile_schedule`` turns it into a visit order (``docid`` or ``impact``);
+  - **per-tile term bounds** — ``term_bounds`` yields ``(m_alpha, m_beta,
+    ub_gl)`` under either ``bound_mode`` (``list`` = MaxScore list maxima,
+    ``tile`` = block-max tightening);
+  - **threshold partitioning** — ``essential_terms`` marks the essential
+    suffix given theta_Gl, ``freeze_bounds`` gives the inclusive beta-bound
+    prefix sums driving the local freeze test.
+
+Executor responsibilities (``core.traversal`` / ``kernels.guided_score``):
+  posting gather, dense scatter, the freeze-loop accumulate, per-tile
+  candidate top-k and queue merges. Executors receive ``essential`` and
+  ``prefix_beta`` ready-made — neither scorer path sees theta_Gl, whose
+  only remaining consumer is the planner-side tile-skip test.
+
+Everything here is pure jnp, shape-static, and vmap / shard_map
+compatible: the same functions drive the batched engine, the sequential
+host loop (which pulls results back with ``np.asarray``) and the
+mesh-sharded executor in ``serve.sharded``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def combine(coef, b, l):
+    """The paper's two-weight interpolation: coef * B + (1 - coef) * L."""
+    return coef * b + (1.0 - coef) * l
+
+
+class QueryPlan(NamedTuple):
+    """Per-query traversal plan: terms presorted ascending by
+    alpha-combined list maxima (the MaxScore partition order)."""
+    qt: jax.Array      # [Nq] int32 term ids, sorted order
+    qwb: jax.Array     # [Nq] f32 BM25-side query weights, sorted order
+    qwl: jax.Array     # [Nq] f32 learned-side query weights, sorted order
+    sig_b: jax.Array   # [Nq] f32 query-weighted list maxima (BM25 side)
+    sig_l: jax.Array   # [Nq] f32 query-weighted list maxima (learned side)
+
+
+def plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha) -> QueryPlan:
+    """Sort query terms ascending by alpha-combined list maxima."""
+    sig_b = qwb * sigma_b[qt]
+    sig_l = qwl * sigma_l[qt]
+    order = jnp.argsort(combine(alpha, sig_b, sig_l))
+    return QueryPlan(qt[order], qwb[order], qwl[order],
+                     sig_b[order], sig_l[order])
+
+
+def tile_upper_bounds(plan: QueryPlan, tile_max_b, tile_max_l, alpha):
+    """Per-tile alpha-combined global upper bounds: [n_tiles]."""
+    tm_b = plan.qwb[:, None] * tile_max_b[plan.qt, :]
+    tm_l = plan.qwl[:, None] * tile_max_l[plan.qt, :]
+    return combine(alpha, tm_b, tm_l).sum(0)
+
+
+def tile_schedule(plan: QueryPlan, tile_max_b, tile_max_l, alpha,
+                  n_tiles: int, schedule: str):
+    """Tile visit order. ``docid`` mirrors DAAT; ``impact`` visits tiles in
+    descending global upper bound so thresholds tighten fastest."""
+    if schedule == "impact":
+        ub = tile_upper_bounds(plan, tile_max_b, tile_max_l, alpha)
+        return jnp.argsort(-ub).astype(jnp.int32)
+    return jnp.arange(n_tiles, dtype=jnp.int32)
+
+
+def term_bounds(plan: QueryPlan, tile_max_b, tile_max_l, tile,
+                alpha, beta, bound_mode: str):
+    """Bounds for one tile visit: per-term maxima under both combinations
+    plus the tile's global upper bound (the skip-test operand).
+
+    ``bound_mode='list'`` partitions with list-level maxima (paper
+    MaxScore); ``'tile'`` with the tile-level block maxima.
+    """
+    tm_b = plan.qwb * tile_max_b[plan.qt, tile]
+    tm_l = plan.qwl * tile_max_l[plan.qt, tile]
+    ub_gl = combine(alpha, tm_b, tm_l).sum()
+    if bound_mode == "tile":
+        m_alpha = combine(alpha, tm_b, tm_l)
+        m_beta = combine(beta, tm_b, tm_l)
+    else:
+        m_alpha = combine(alpha, plan.sig_b, plan.sig_l)
+        m_beta = combine(beta, plan.sig_b, plan.sig_l)
+    return m_alpha, m_beta, ub_gl
+
+
+def essential_terms(m_alpha, th_gl):
+    """Global-level term partition: the suffix whose inclusive prefix bound
+    exceeds theta_Gl is essential (bool, sorted term order)."""
+    return jnp.cumsum(m_alpha) > th_gl
+
+
+def freeze_bounds(m_beta):
+    """Inclusive prefix sums of the beta-combined bounds: the remaining
+    upper bound used by the local freeze test before each term."""
+    return jnp.cumsum(m_beta)

@@ -1,0 +1,140 @@
+"""Tile-range sharding of the BlockedImpactIndex for mesh-parallel retrieval.
+
+The docid space is partitioned into ``n_shards`` *contiguous tile ranges*
+(tiles are already independent scan units, so a range of them is a fully
+self-contained mini-index). For each shard the host build re-packs the
+term-major posting runs that fall inside its range, rebases docids to the
+shard-local space (docid - shard_start_tile * tile_size) and rebases
+``tile_ptr`` into the shard's flat arrays. All shards are padded to one
+static shape — ``tiles_per_shard`` tiles, ``max_nnz`` postings — and
+stacked on a leading shard axis, so the stack maps directly onto a mesh
+axis via ``shard_map`` (or a ``vmap`` emulation on one device).
+
+List-level maxima (``sigma_b``/``sigma_l``) stay *global* and replicated:
+every shard must sort query terms in the same order or the MaxScore
+partition — and therefore results — would diverge between shard counts.
+
+Padded tiles (when ``n_shards`` does not divide ``n_tiles``) carry zero
+postings and zero block maxima; they survive nothing and contribute only
+NEG_INF candidates, which lose stable-tie merges against real entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import BlockedImpactIndex
+
+
+@dataclasses.dataclass
+class ShardedImpactIndex:
+    """Stacked per-shard view of a BlockedImpactIndex (leading dim = shard)."""
+    n_shards: int
+    n_docs: int
+    n_terms: int
+    tile_size: int
+    n_tiles: int            # real (unpadded) global tile count
+    tiles_per_shard: int    # padded: n_shards * tiles_per_shard >= n_tiles
+    pad_len: int
+    doc_base: jax.Array     # [n_shards] int32 first internal docid per shard
+    n_real_tiles: jax.Array  # [n_shards] int32 real tiles (rest is padding)
+    nnz_per_shard: np.ndarray
+    docids: jax.Array       # [n_shards, max_nnz] int32 shard-local docids
+    w_b: jax.Array          # [n_shards, max_nnz] f32
+    w_l: jax.Array          # [n_shards, max_nnz] f32
+    tile_ptr: jax.Array     # [n_shards, n_terms, tiles_per_shard + 1] int32
+    tile_max_b: jax.Array   # [n_shards, n_terms, tiles_per_shard] f32
+    tile_max_l: jax.Array   # [n_shards, n_terms, tiles_per_shard] f32
+    sigma_b: jax.Array      # [n_terms] f32 — global, replicated
+    sigma_l: jax.Array      # [n_terms] f32 — global, replicated
+    orig_of_new: np.ndarray | None = None
+
+    def to_orig(self, ids: np.ndarray) -> np.ndarray:
+        """Map internal docids back to original ids (-1 passes through)."""
+        ids = np.asarray(ids)
+        if self.orig_of_new is None:
+            return ids
+        safe = np.clip(ids, 0, self.n_docs - 1)
+        return np.where(ids < 0, ids, self.orig_of_new[safe]).astype(ids.dtype)
+
+
+def shard_index(index: BlockedImpactIndex, n_shards: int) -> ShardedImpactIndex:
+    """Partition ``index`` into ``n_shards`` contiguous tile ranges.
+
+    Host-side numpy re-pack; shards are padded to a common static shape so
+    the result stacks on a leading shard axis.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_terms, n_tiles = index.n_terms, index.n_tiles
+    tile_size = index.tile_size
+    tps = -(-n_tiles // n_shards)  # ceil: padded tiles per shard
+
+    h_ptr = np.asarray(index.tile_ptr)
+    h_docids = np.asarray(index.docids)
+    h_wb = np.asarray(index.w_b)
+    h_wl = np.asarray(index.w_l)
+    h_tmb = np.asarray(index.tile_max_b)
+    h_tml = np.asarray(index.tile_max_l)
+
+    per_shard = []
+    nnz = np.zeros(n_shards, dtype=np.int64)
+    for s in range(n_shards):
+        t0 = min(s * tps, n_tiles)
+        t1 = min((s + 1) * tps, n_tiles)
+        starts = h_ptr[:, t0].astype(np.int64)
+        ends = h_ptr[:, t1].astype(np.int64)
+        lens = ends - starts
+        total = int(lens.sum())
+        out_starts = np.zeros(n_terms + 1, dtype=np.int64)
+        np.cumsum(lens, out=out_starts[1:])
+        # gather each term's run for this tile range into one flat slab
+        flat = (np.arange(total, dtype=np.int64)
+                - np.repeat(out_starts[:-1], lens) + np.repeat(starts, lens))
+        local_doc = h_docids[flat].astype(np.int64) - t0 * tile_size
+        # rebase tile_ptr into the slab; pad tiles repeat the last offset
+        lp = np.empty((n_terms, tps + 1), dtype=np.int32)
+        real = t1 - t0
+        lp[:, :real + 1] = (h_ptr[:, t0:t1 + 1].astype(np.int64)
+                            - starts[:, None] + out_starts[:-1, None]
+                            ).astype(np.int32)
+        lp[:, real + 1:] = lp[:, real:real + 1]
+        tmb = np.zeros((n_terms, tps), dtype=np.float32)
+        tml = np.zeros((n_terms, tps), dtype=np.float32)
+        tmb[:, :real] = h_tmb[:, t0:t1]
+        tml[:, :real] = h_tml[:, t0:t1]
+        nnz[s] = total
+        per_shard.append((local_doc.astype(np.int32), h_wb[flat], h_wl[flat],
+                          lp, tmb, tml, t0 * tile_size))
+
+    max_nnz = max(1, int(nnz.max()))
+
+    def pad_flat(a, fill):
+        out = np.full(max_nnz, fill, dtype=a.dtype)
+        out[:len(a)] = a
+        return out
+
+    docids = np.stack([pad_flat(p[0], 0) for p in per_shard])
+    w_b = np.stack([pad_flat(p[1], 0.0) for p in per_shard])
+    w_l = np.stack([pad_flat(p[2], 0.0) for p in per_shard])
+    tile_ptr = np.stack([p[3] for p in per_shard])
+    tile_max_b = np.stack([p[4] for p in per_shard])
+    tile_max_l = np.stack([p[5] for p in per_shard])
+    doc_base = np.array([p[6] for p in per_shard], dtype=np.int32)
+    n_real = np.clip(n_tiles - tps * np.arange(n_shards), 0, tps
+                     ).astype(np.int32)
+
+    return ShardedImpactIndex(
+        n_shards=n_shards, n_docs=index.n_docs, n_terms=n_terms,
+        tile_size=tile_size, n_tiles=n_tiles, tiles_per_shard=tps,
+        pad_len=index.pad_len,
+        doc_base=jnp.asarray(doc_base), n_real_tiles=jnp.asarray(n_real),
+        nnz_per_shard=nnz,
+        docids=jnp.asarray(docids), w_b=jnp.asarray(w_b),
+        w_l=jnp.asarray(w_l), tile_ptr=jnp.asarray(tile_ptr),
+        tile_max_b=jnp.asarray(tile_max_b), tile_max_l=jnp.asarray(tile_max_l),
+        sigma_b=index.sigma_b, sigma_l=index.sigma_l,
+        orig_of_new=index.orig_of_new)

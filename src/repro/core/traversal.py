@@ -17,11 +17,20 @@ DAAT threshold dynamic at tile granularity. Per tile:
      which still enters Q_Rk (paper queue discipline).
   4. Tile-local top-k of Global/Local/Rank merge into the carried queues.
 
-Two modes share this tile scorer:
+Planner/executor split (see ``core.plan`` for the full contract): term
+sorting, tile scheduling, bound computation and the theta_Gl partition all
+live in the planner; this module holds the *executors* — ``score_tile``
+(pure jnp) and ``_score_tile_kernel`` (fused Pallas ``guided_score``) share
+one contract ``(offs, wb, wl, essential, prefix_beta, th_lo, ...)`` and are
+interchangeable per ``use_kernel``. ``_tile_step`` is the executor step
+driven by every traversal mode:
+
   - ``retrieve_batched``: vmap over queries x lax.scan over tiles (TPU path;
     skips are masked compute, turned into real skips by the Pallas kernel).
   - ``retrieve_sequential``: host loop with *physical* tile skipping, timing
     each query — the paper's single-threaded latency regime.
+  - ``serve.sharded.shard_retrieve_batched``: per-shard tile scans under
+    ``shard_map`` with a collective top-k merge (same step, same planner).
 """
 from __future__ import annotations
 
@@ -34,9 +43,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from .index import BlockedImpactIndex
+from .plan import (QueryPlan, combine, essential_terms, freeze_bounds,
+                   plan_query, term_bounds, tile_schedule, tile_upper_bounds)
 from .twolevel import TwoLevelParams
 
 NEG_INF = jnp.float32(-jnp.inf)
+
+# Kept under the historical name: kernel tests exercise the executor's
+# combination directly.
+_combine = combine
+
+STAT_KEYS = ("docs_present", "docs_survived", "docs_frozen",
+             "postings_touched", "tiles_visited")
 
 
 @dataclasses.dataclass
@@ -49,10 +67,6 @@ class RetrievalResult:
     latencies_ms: np.ndarray | None = None  # sequential mode only
 
 
-def _combine(coef, b, l):
-    return coef * b + (1.0 - coef) * l
-
-
 def _merge_queue(q_vals, q_ids, c_vals, c_ids, k: int):
     """Merge tile candidates into a sorted top-k queue (stable ties)."""
     vals = jnp.concatenate([q_vals, c_vals])
@@ -61,14 +75,19 @@ def _merge_queue(q_vals, q_ids, c_vals, c_ids, k: int):
     return top_vals, ids[idx]
 
 
-def score_tile(offs, wb, wl, m_alpha, m_beta, th_gl, th_lo,
+def _tile_topk(scores, mask, kq: int):
+    vals, idx = jax.lax.top_k(jnp.where(mask, scores, NEG_INF), kq)
+    return vals, idx.astype(jnp.int32)
+
+
+def score_tile(offs, wb, wl, essential, prefix_beta, th_lo,
                alpha, beta, gamma, *, tile_size: int, kq: int):
     """Score one tile for one query. See module docstring for the levels.
 
-    offs:    [Nq, P] int32 local doc offsets (-1 = padding)
-    wb, wl:  [Nq, P] f32 query-weighted posting weights (0 = padding)
-    m_alpha: [Nq] f32 alpha-combined per-term bound maxima (sorted order)
-    m_beta:  [Nq] f32 beta-combined per-term bound maxima (same order)
+    offs:        [Nq, P] int32 local doc offsets (-1 = padding)
+    wb, wl:      [Nq, P] f32 query-weighted posting weights (0 = padding)
+    essential:   [Nq] bool essential-term mask (planner, sorted order)
+    prefix_beta: [Nq] f32 inclusive beta-bound prefix sums (planner)
     Returns three (vals, local_idx) candidate sets + stat counters.
     """
     nq = offs.shape[0]
@@ -85,20 +104,15 @@ def score_tile(offs, wb, wl, m_alpha, m_beta, th_gl, th_lo,
     cnt = jax.ops.segment_sum(valid.ravel().astype(jnp.float32), seg,
                               num_segments=nq * (S + 1)).reshape(nq, S + 1)[:, :S]
 
-    # Global level: essential = suffix whose prefix-incl bound exceeds theta.
-    prefix_alpha = jnp.cumsum(m_alpha)
-    essential = prefix_alpha > th_gl                       # [Nq] bool
     present = cnt.sum(0) > 0                               # [S]
     ess_cnt = jnp.einsum("t,ts->s", essential.astype(jnp.float32), cnt)
     survive = ess_cnt > 0                                  # [S]
 
     # Local level: descending accumulate with freeze checks.
-    prefix_beta = jnp.cumsum(m_beta)                       # includes term i
-
     def body(j, state):
         i = nq - 1 - j
         sb, sl, alive = state
-        l_part = _combine(beta, sb, sl)
+        l_part = combine(beta, sb, sl)
         ok = essential[i] | (l_part + prefix_beta[i] > th_lo)
         alive = alive & ok
         gate = (survive & alive).astype(sb.dtype)
@@ -110,24 +124,50 @@ def score_tile(offs, wb, wl, m_alpha, m_beta, th_gl, th_lo,
     alive0 = jnp.ones(S, dtype=bool)
     sb, sl, alive = jax.lax.fori_loop(0, nq, body, (sb0, sb0, alive0))
 
-    g = _combine(alpha, sb, sl)
-    l = _combine(beta, sb, sl)
-    r = _combine(gamma, sb, sl)
+    g = combine(alpha, sb, sl)
+    l = combine(beta, sb, sl)
+    r = combine(gamma, sb, sl)
     eval_mask = survive & alive
     rank_mask = survive
 
-    def tile_topk(scores, mask):
-        vals, idx = jax.lax.top_k(jnp.where(mask, scores, NEG_INF), kq)
-        return vals, idx.astype(jnp.int32)
-
-    g_c = tile_topk(g, eval_mask)
-    l_c = tile_topk(l, eval_mask)
-    r_c = tile_topk(r, rank_mask)
+    g_c = _tile_topk(g, eval_mask, kq)
+    l_c = _tile_topk(l, eval_mask, kq)
+    r_c = _tile_topk(r, rank_mask, kq)
     stats = jnp.stack([present.sum().astype(jnp.float32),
                        survive.sum().astype(jnp.float32),
                        (survive & ~alive).sum().astype(jnp.float32),
                        valid.sum().astype(jnp.float32)])
     return g_c, l_c, r_c, stats
+
+
+def _score_tile_kernel(offs, wb, wl, essential, prefix_beta, th_lo,
+                       alpha, beta, gamma, *, tile_size: int, kq: int):
+    """Pallas guided_score kernel path (interpret mode on CPU): same
+    contract as ``score_tile``; the fused kernel returns G/L/R + masks."""
+    from ..kernels.guided_score import guided_score_tile
+    out = guided_score_tile(offs, wb, wl, essential.astype(jnp.float32),
+                            prefix_beta, th_lo, alpha, beta, gamma,
+                            tile_size=tile_size,
+                            block_s=min(512, tile_size))
+    g, l, r, eval_m, rank_m = out
+    eval_mask = eval_m > 0
+    rank_mask = rank_m > 0
+
+    # The kernel reports only the post-partition masks; presence is
+    # re-derived from the gathered offsets exactly as score_tile counts it
+    # (one scatter over doc slots), so both paths report identical stats.
+    valid = offs >= 0
+    S = tile_size
+    offs_safe = jnp.where(valid, offs, S).astype(jnp.int32)
+    cnt = jax.ops.segment_sum(valid.ravel().astype(jnp.float32),
+                              offs_safe.ravel(), num_segments=S + 1)[:S]
+    present = cnt > 0
+    stats = jnp.stack([present.sum().astype(jnp.float32),
+                       rank_m.sum(),
+                       (rank_mask & ~eval_mask).sum().astype(jnp.float32),
+                       valid.sum().astype(jnp.float32)])
+    return (_tile_topk(g, eval_mask, kq), _tile_topk(l, eval_mask, kq),
+            _tile_topk(r, rank_mask, kq), stats)
 
 
 def _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl, tile,
@@ -145,68 +185,43 @@ def _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl, tile,
     return offs, wb, wl
 
 
-def _sort_query(qt, qwb, qwl, sigma_b, sigma_l, alpha):
-    """Presort query terms ascending by alpha-combined list maxima."""
-    sig_b = qwb * sigma_b[qt]
-    sig_l = qwl * sigma_l[qt]
-    order = jnp.argsort(_combine(alpha, sig_b, sig_l))
-    return (qt[order], qwb[order], qwl[order], sig_b[order], sig_l[order])
-
-
-def _score_tile_kernel(offs, wb, wl, m_alpha, m_beta, th_gl, th_lo,
-                       alpha, beta, gamma, *, tile_size: int, kq: int):
-    """Pallas guided_score kernel path (interpret mode on CPU): same
-    contract as ``score_tile``; the fused kernel returns G/L/R + masks."""
-    from ..kernels.guided_score import guided_score_tile
-    essential = (jnp.cumsum(m_alpha) > th_gl).astype(jnp.float32)
-    prefix_beta = jnp.cumsum(m_beta)
-    out = guided_score_tile(offs, wb, wl, essential, prefix_beta,
-                            th_gl, th_lo, alpha, beta, gamma,
-                            tile_size=tile_size,
-                            block_s=min(512, tile_size))
-    g, l, r, eval_m, rank_m = out
-    eval_mask = eval_m > 0
-    rank_mask = rank_m > 0
-
-    def tile_topk(scores, mask):
-        vals, idx = jax.lax.top_k(jnp.where(mask, scores, NEG_INF), kq)
-        return vals, idx.astype(jnp.int32)
-
-    valid = offs >= 0
-    stats = jnp.stack([rank_m.sum(),                      # ~present (>=)
-                       rank_m.sum(),
-                       (rank_mask & ~eval_mask).sum().astype(jnp.float32),
-                       valid.sum().astype(jnp.float32)])
-    return (tile_topk(g, eval_mask), tile_topk(l, eval_mask),
-            tile_topk(r, rank_mask), stats)
-
-
-def _tile_step(idx_arrays, qt, qwb, qwl, sig_b, sig_l, carry, tile,
+def _tile_step(idx_arrays, plan: QueryPlan, carry, tile,
                alpha, beta, gamma, factor,
-               *, k, kq, pad_len, tile_size, bound_mode, use_kernel=False):
-    """One tile visit: gather -> skip test -> score -> queue merge."""
+               *, k, kq, pad_len, tile_size, bound_mode, use_kernel=False,
+               th_floor=None, tile_valid=None):
+    """One tile visit: plan bounds -> skip test -> score -> queue merge.
+
+    ``th_floor`` (optional scalar) is an externally supplied lower bound on
+    theta_Gl — the sharded path injects the exchanged global threshold here
+    so a shard prunes against the global queue, not just its local one.
+    Thresholds only tighten, so any floor <= the true global theta is safe.
+
+    ``tile_valid`` (optional bool) force-skips the visit when False — the
+    sharded path marks its shape-padding tiles invalid so they never enter
+    queues or stats and skip rates stay comparable across engines.
+    """
     docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l = idx_arrays
     (gv, gi, lv, li, rv, ri, st) = carry
-    th_gl = gv[-1] * factor
+    th_gl = gv[-1]
+    if th_floor is not None:
+        th_gl = jnp.maximum(th_gl, th_floor)
+    th_gl = th_gl * factor
     th_lo = lv[-1] * factor
 
-    tm_b = qwb * tile_max_b[qt, tile]
-    tm_l = qwl * tile_max_l[qt, tile]
-    ub_gl = _combine(alpha, tm_b, tm_l).sum()
+    m_alpha, m_beta, ub_gl = term_bounds(plan, tile_max_b, tile_max_l, tile,
+                                         alpha, beta, bound_mode)
     skip = ub_gl <= th_gl
+    if tile_valid is not None:
+        skip = skip | ~tile_valid
+    essential = essential_terms(m_alpha, th_gl)
+    prefix_beta = freeze_bounds(m_beta)
 
-    if bound_mode == "tile":
-        m_alpha = _combine(alpha, tm_b, tm_l)
-        m_beta = _combine(beta, tm_b, tm_l)
-    else:
-        m_alpha = _combine(alpha, sig_b, sig_l)
-        m_beta = _combine(beta, sig_b, sig_l)
-
-    offs, wb, wl = _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl,
+    offs, wb, wl = _gather_tile(docids, w_b, w_l, tile_ptr,
+                                plan.qt, plan.qwb, plan.qwl,
                                 tile, pad_len=pad_len, tile_size=tile_size)
     scorer = _score_tile_kernel if use_kernel else score_tile
     g_c, l_c, r_c, stats = scorer(
-        offs, wb, wl, m_alpha, m_beta, th_gl, th_lo, alpha, beta, gamma,
+        offs, wb, wl, essential, prefix_beta, th_lo, alpha, beta, gamma,
         tile_size=tile_size, kq=kq)
 
     base = tile * tile_size
@@ -230,13 +245,6 @@ def _init_carry(k):
     return (vals, ids, vals, ids, vals, ids, jnp.zeros(5, dtype=jnp.float32))
 
 
-def _tile_upper_bounds(tile_max_b, tile_max_l, qt, qwb, qwl, alpha):
-    """Per-tile alpha-combined global upper bounds: [n_tiles]."""
-    tm_b = qwb[:, None] * tile_max_b[qt, :]
-    tm_l = qwl[:, None] * tile_max_l[qt, :]
-    return _combine(alpha, tm_b, tm_l).sum(0)
-
-
 @partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
                                    "n_tiles", "bound_mode", "schedule",
                                    "use_kernel"))
@@ -248,18 +256,13 @@ def _retrieve_batched_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
     idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
 
     def one_query(qt, qwb, qwl):
-        qt, qwb, qwl, sig_b, sig_l = _sort_query(qt, qwb, qwl,
-                                                 sigma_b, sigma_l, alpha)
-        if schedule == "impact":
-            ub = _tile_upper_bounds(tile_max_b, tile_max_l, qt, qwb, qwl,
-                                    alpha)
-            tiles = jnp.argsort(-ub).astype(jnp.int32)
-        else:
-            tiles = jnp.arange(n_tiles, dtype=jnp.int32)
+        plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
+        tiles = tile_schedule(plan, tile_max_b, tile_max_l, alpha,
+                              n_tiles, schedule)
 
         def step(carry, tile):
-            carry = _tile_step(idx_arrays, qt, qwb, qwl, sig_b, sig_l, carry,
-                               tile, alpha, beta, gamma, factor,
+            carry = _tile_step(idx_arrays, plan, carry, tile,
+                               alpha, beta, gamma, factor,
                                k=k, kq=kq, pad_len=pad_len,
                                tile_size=tile_size, bound_mode=bound_mode,
                                use_kernel=use_kernel)
@@ -292,8 +295,7 @@ def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
         n_tiles=index.n_tiles, bound_mode=params.bound_mode,
         schedule=params.schedule, use_kernel=use_kernel)
     gv, gi, lv, li, rv, ri, st = jax.tree_util.tree_map(np.asarray, out)
-    stats = dict(zip(("docs_present", "docs_survived", "docs_frozen",
-                      "postings_touched", "tiles_visited"), st.T))
+    stats = dict(zip(STAT_KEYS, st.T))
     stats["n_tiles"] = np.full(q_terms.shape[0], index.n_tiles, np.float32)
     return RetrievalResult(ids=index.to_orig(ri), scores=rv,
                            global_ids=index.to_orig(gi),
@@ -304,14 +306,22 @@ def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
 # Sequential mode: host tile loop with physical skipping (latency benchmarks).
 # ---------------------------------------------------------------------------
 
+@jax.jit
+def _plan_with_bounds(qt, qwb, qwl, sigma_b, sigma_l,
+                      tile_max_b, tile_max_l, alpha):
+    """Planner entry for the host loop: plan + per-tile upper bounds."""
+    plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
+    ub = tile_upper_bounds(plan, tile_max_b, tile_max_l, alpha)
+    return plan, ub
+
+
 @partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
                                    "bound_mode"))
 def _tile_step_jit(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
-                   qt, qwb, qwl, sig_b, sig_l, carry, tile,
-                   alpha, beta, gamma, factor,
+                   plan, carry, tile, alpha, beta, gamma, factor,
                    *, k, kq, pad_len, tile_size, bound_mode):
     idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
-    return _tile_step(idx_arrays, qt, qwb, qwl, sig_b, sig_l, carry, tile,
+    return _tile_step(idx_arrays, plan, carry, tile,
                       alpha, beta, gamma, factor, k=k, kq=kq, pad_len=pad_len,
                       tile_size=tile_size, bound_mode=bound_mode)
 
@@ -322,16 +332,13 @@ def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
     """Host-driven per-query traversal with physical tile skipping + timing.
 
     Mirrors the paper's single-threaded CPU latency regime: skipped tiles
-    cost nothing (the gather/score call is never issued).
+    cost nothing (the gather/score call is never issued). Planning runs
+    through the same ``core.plan`` functions as the batched engine; only
+    the skip *decision* is evaluated on host so it can elide work.
     """
     B = len(q_terms)
     k = params.k
     kq = min(k, index.tile_size)
-    # Host mirrors for the skip test (cheap gathers).
-    h_tm_b = np.asarray(index.tile_max_b)
-    h_tm_l = np.asarray(index.tile_max_l)
-    h_sig_b = np.asarray(index.sigma_b)
-    h_sig_l = np.asarray(index.sigma_l)
     alpha, beta, gamma = params.alpha, params.beta, params.gamma
     factor = params.threshold_factor
     args = (jnp.float32(alpha), jnp.float32(beta), jnp.float32(gamma),
@@ -346,22 +353,17 @@ def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
     stat_rows = np.zeros((B, 6), np.float32)
 
     def run_query(qi, record):
-        qt = np.asarray(q_terms[qi], dtype=np.int32)
-        qwb = np.asarray(qw_b[qi], dtype=np.float32)
-        qwl = np.asarray(qw_l[qi], dtype=np.float32)
-        sig_b = qwb * h_sig_b[qt]
-        sig_l = qwl * h_sig_l[qt]
-        order = np.argsort(alpha * sig_b + (1 - alpha) * sig_l,
-                           kind="stable")
-        qt, qwb, qwl = qt[order], qwb[order], qwl[order]
-        sig_b, sig_l = sig_b[order], sig_l[order]
-        # Per-tile upper bounds for the host-side skip test: [T]
-        ub = (alpha * qwb[:, None] * h_tm_b[qt]
-              + (1 - alpha) * qwl[:, None] * h_tm_l[qt]).sum(0)
-        j_qt, j_qwb, j_qwl = jnp.asarray(qt), jnp.asarray(qwb), jnp.asarray(qwl)
-        j_sb, j_sl = jnp.asarray(sig_b), jnp.asarray(sig_l)
+        qt = jnp.asarray(np.asarray(q_terms[qi], dtype=np.int32))
+        qwb = jnp.asarray(np.asarray(qw_b[qi], dtype=np.float32))
+        qwl = jnp.asarray(np.asarray(qw_l[qi], dtype=np.float32))
+        plan, ub_dev = _plan_with_bounds(qt, qwb, qwl,
+                                         index.sigma_b, index.sigma_l,
+                                         index.tile_max_b, index.tile_max_l,
+                                         jnp.float32(alpha))
+        ub = np.asarray(ub_dev)
         impact = params.schedule == "impact"
-        tile_order = np.argsort(-ub) if impact else np.arange(index.n_tiles)
+        tile_order = (np.argsort(-ub, kind="stable") if impact
+                      else np.arange(index.n_tiles))
         t0 = time.perf_counter()
         carry = _init_carry(k)
         th_gl = -np.inf
@@ -374,8 +376,7 @@ def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
             carry = _tile_step_jit(
                 index.docids, index.w_b, index.w_l, index.tile_ptr,
                 index.tile_max_b, index.tile_max_l,
-                j_qt, j_qwb, j_qwl, j_sb, j_sl, carry,
-                jnp.int32(tau), *args, **statics)
+                plan, carry, jnp.int32(tau), *args, **statics)
             th_gl = float(carry[0][-1])
             visited += 1
         carry = jax.tree_util.tree_map(np.asarray, carry)
@@ -392,9 +393,7 @@ def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
     for qi in range(B):
         run_query(qi, record=True)
 
-    stats = dict(zip(("docs_present", "docs_survived", "docs_frozen",
-                      "postings_touched", "tiles_visited", "n_tiles"),
-                     stat_rows.T))
+    stats = dict(zip(STAT_KEYS + ("n_tiles",), stat_rows.T))
     return RetrievalResult(ids=index.to_orig(ids), scores=scores,
                            global_ids=index.to_orig(g_ids),
                            local_ids=index.to_orig(l_ids), stats=stats,

@@ -3,7 +3,7 @@
 # runs unchanged on the 1-device CPU test mesh, the 8-device subprocess mesh,
 # and the 512-device production dry-run meshes.
 from .collectives import (hierarchical_all_reduce, reduce_scatter,  # noqa: F401
-                          ring_all_gather, ring_all_reduce)
+                          ring_all_gather, ring_all_reduce, ring_gather_stack)
 from .compression import (CompressionConfig, compress_with_feedback,  # noqa: F401
                           compression_ratio, init_error_feedback, topk_sparsify)
 from .sharding import (activation_rules, input_shardings,  # noqa: F401

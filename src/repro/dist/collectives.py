@@ -115,24 +115,35 @@ def reduce_scatter(x, mesh, axis_name: str):
                      check_rep=False)(x)
 
 
+def ring_gather_stack(local, axis_name: str, n: int):
+    """In-shard_map building block: ring all-gather every device's ``local``
+    into a new leading axis ordered by device index ([*] -> [n, *], entry j
+    = device j's contribution). This is the primitive behind both
+    ``ring_all_gather`` and the sharded-retrieval top-k queue merge
+    (``serve.sharded``), which needs the stacked form to keep the
+    shard-order stable-tie semantics of the single-device queue."""
+    if n == 1:
+        return local[None]
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    out = jnp.zeros((n,) + local.shape, local.dtype).at[idx].set(local)
+
+    def step(s, carry):
+        blk, acc = carry
+        blk = jax.lax.ppermute(blk, axis_name, fwd)
+        return blk, acc.at[(idx - s - 1) % n].set(blk)
+
+    _, out = jax.lax.fori_loop(0, n - 1, step, (local, out))
+    return out
+
+
 def ring_all_gather(x, mesh, axis_name: str):
     """All-gather the per-device slices: every device ends with the full
     concatenation (result replicated, same global shape as ``x``)."""
     n = mesh.shape[axis_name]
 
     def f(local):
-        if n == 1:
-            return local
-        idx = jax.lax.axis_index(axis_name)
-        fwd = [(i, (i + 1) % n) for i in range(n)]
-        out = jnp.zeros((n,) + local.shape, local.dtype).at[idx].set(local)
-
-        def step(s, carry):
-            blk, acc = carry
-            blk = jax.lax.ppermute(blk, axis_name, fwd)
-            return blk, acc.at[(idx - s - 1) % n].set(blk)
-
-        _, out = jax.lax.fori_loop(0, n - 1, step, (local, out))
+        out = ring_gather_stack(local, axis_name, n)
         return out.reshape((n * local.shape[0],) + local.shape[1:])
 
     return shard_map(f, mesh=mesh,

@@ -11,9 +11,11 @@ tile-scan engine:
   4. the three hybrid combinations Global/Local/Rank.
 
 One pallas_call scores one (query, tile) pair; the grid tiles the docid
-axis of the tile in ``block_s`` lanes. Skipped-tile work elision is the
-caller's job (the tile is never dispatched); *within* a tile the freeze
-masks gate the accumulate.
+axis of the tile in ``block_s`` lanes. The kernel is a pure *executor* in
+the planner/executor contract (``core.plan``): the essential partition and
+freeze bounds arrive precomputed, theta_Gl never enters the kernel, and
+skipped-tile work elision is the caller's job (the tile is never
+dispatched); *within* a tile the freeze masks gate the accumulate.
 
 VMEM budget per grid cell (defaults Nq<=32, P<=512, block_s=512, f32):
 offs/wb/wl 3 * 32*512*4 = 256 KiB, scratch dense rows 2 * 64 KiB,
@@ -31,11 +33,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(scal_ref, ess_ref, pbeta_ref, offs_ref, wb_ref, wl_ref,
             out_ref, dense_b, dense_l, *, nq: int, block_s: int):
-    th_gl = scal_ref[0]  # noqa: F841  (tile-skip handled by caller)
-    th_lo = scal_ref[1]
-    alpha = scal_ref[2]
-    beta = scal_ref[3]
-    gamma = scal_ref[4]
+    th_lo = scal_ref[0]
+    alpha = scal_ref[1]
+    beta = scal_ref[2]
+    gamma = scal_ref[3]
     base = pl.program_id(0) * block_s
     lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
 
@@ -82,14 +83,14 @@ def _kernel(scal_ref, ess_ref, pbeta_ref, offs_ref, wb_ref, wl_ref,
 
 @functools.partial(jax.jit, static_argnames=("tile_size", "block_s",
                                              "interpret"))
-def guided_score_tile(offs, wb, wl, essential, prefix_beta, th_gl, th_lo,
+def guided_score_tile(offs, wb, wl, essential, prefix_beta, th_lo,
                       alpha, beta, gamma, *, tile_size: int,
                       block_s: int = 512, interpret: bool = True):
     """Score one (query, tile) pair. Returns [5, tile_size] (see kernel)."""
     nq, p = offs.shape
     block_s = min(block_s, tile_size)
     assert tile_size % block_s == 0
-    scal = jnp.stack([th_gl, th_lo, alpha, beta, gamma]).astype(jnp.float32)
+    scal = jnp.stack([th_lo, alpha, beta, gamma]).astype(jnp.float32)
     grid = (tile_size // block_s,)
     kern = functools.partial(_kernel, nq=nq, block_s=block_s)
     return pl.pallas_call(

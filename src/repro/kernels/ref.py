@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 
-def guided_score_tile_ref(offs, wb, wl, essential, prefix_beta, th_gl, th_lo,
+def guided_score_tile_ref(offs, wb, wl, essential, prefix_beta, th_lo,
                           alpha, beta, gamma, *, tile_size: int):
     """Oracle for kernels.guided_score.guided_score_tile -> [5, tile_size]."""
     nq, p = offs.shape

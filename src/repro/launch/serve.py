@@ -1,12 +1,49 @@
 """Serving launcher: batched 2GTI retrieval over a synthetic corpus.
 
     PYTHONPATH=src python -m repro.launch.serve --preset splade_like
+    PYTHONPATH=src python -m repro.launch.serve --shards 4 --host-devices 4
+
+``--shards N`` serves through the mesh-sharded engine: a one-axis mesh
+when N devices exist (``--host-devices`` fakes them on CPU), else the
+single-device vmap emulation path (bit-identical results).
 """
 import argparse
+import os
+import sys
 
-from repro.core import build_index, twolevel
-from repro.data import make_corpus
-from repro.serve import Request, RetrievalServer, ServerConfig
+
+def _preparse_host_devices() -> None:
+    """--host-devices must reach XLA before the backend initializes, i.e.
+    before any repro import triggers a jnp array build. Appends to any
+    pre-existing XLA_FLAGS; malformed values fall through to argparse; a
+    conflicting pre-existing device count wins, with a warning."""
+    n = None
+    for i, tok in enumerate(sys.argv):
+        if tok == "--host-devices" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif tok.startswith("--host-devices="):
+            n = tok.split("=", 1)[1]
+    if n is None or not n.isdigit():
+        return
+    prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in prev:
+        if f"xla_force_host_platform_device_count={n}" not in prev:
+            print(f"# warning: XLA_FLAGS already pins a device count; "
+                  f"--host-devices {n} is ignored ({prev})", file=sys.stderr)
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"{prev} --xla_force_host_platform_device_count={n}".strip())
+
+
+if __name__ == "__main__":  # importers must not get argv-driven env edits
+    _preparse_host_devices()
+
+import jax  # noqa: E402
+
+from repro.core import build_index, twolevel  # noqa: E402
+from repro.data import make_corpus  # noqa: E402
+from repro.serve import (Request, RetrievalServer, ServerConfig,  # noqa: E402
+                         ShardedRetrievalServer, make_shard_mesh)
 
 
 def main() -> None:
@@ -17,13 +54,29 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--beta", type=float, default=0.3)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the index over N tile-range shards")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="fake N host devices (must be set at launch)")
+    ap.add_argument("--exchange-every", type=int, default=0,
+                    help="all-gather global theta_Gl every E tiles")
     args = ap.parse_args()
     corpus = make_corpus(args.preset, n_docs=args.docs, n_terms=4096,
                          n_queries=64)
     index = build_index(corpus.merged("scaled"), tile_size=1024)
     params = twolevel.fast(k=args.k, beta=args.beta).replace(
         schedule="impact")
-    srv = RetrievalServer(index, params, ServerConfig(max_batch=16))
+    if args.shards > 1:
+        mesh = (make_shard_mesh(args.shards)
+                if len(jax.devices()) >= args.shards else None)
+        srv = ShardedRetrievalServer(
+            index, params, ServerConfig(max_batch=16),
+            n_shards=args.shards, mesh=mesh,
+            exchange_every=args.exchange_every)
+        path = "mesh" if mesh is not None else "emulated"
+        print(f"# sharded serving: {args.shards} shards ({path})")
+    else:
+        srv = RetrievalServer(index, params, ServerConfig(max_batch=16))
     reqs = [Request(corpus.queries[i % 64], corpus.q_weights_b[i % 64],
                     corpus.q_weights_l[i % 64])
             for i in range(args.requests)]

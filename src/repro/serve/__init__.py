@@ -1,2 +1,4 @@
 from .engine import (RetrievalServer, Request,  # noqa: F401
                      ServerConfig)
+from .sharded import (ShardedRetrievalServer, make_shard_mesh,  # noqa: F401
+                      shard_retrieve_batched)

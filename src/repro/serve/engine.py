@@ -43,10 +43,12 @@ class Request:
 
 class RetrievalServer:
     def __init__(self, index: BlockedImpactIndex, params: TwoLevelParams,
-                 cfg: ServerConfig = ServerConfig()):
+                 cfg: ServerConfig | None = None):
         self.index = index
         self.params = params
-        self.cfg = cfg
+        # None -> fresh per-instance config (a shared default instance would
+        # leak max_batch/pad_terms mutations across servers)
+        self.cfg = cfg if cfg is not None else ServerConfig()
         self.pending: list[Request] = []
         self.completed: list[Request] = []
 
@@ -65,6 +67,11 @@ class RetrievalServer:
         keep = np.argsort(-impact, kind="stable")[:self.cfg.pad_terms]
         return np.sort(keep)  # preserve original term order
 
+    def _retrieve(self, terms, qw_b, qw_l):
+        """Batch executor hook — subclasses swap the retrieval engine
+        (ShardedRetrievalServer routes through the mesh-sharded path)."""
+        return retrieve_batched(self.index, terms, qw_b, qw_l, self.params)
+
     def _flush(self) -> None:
         batch, self.pending = (self.pending[:self.cfg.max_batch],
                                self.pending[self.cfg.max_batch:])
@@ -78,7 +85,7 @@ class RetrievalServer:
             terms[i, :k] = np.asarray(r.terms)[keep]
             qw_b[i, :k] = np.asarray(r.qw_b)[keep]
             qw_l[i, :k] = np.asarray(r.qw_l)[keep]
-        res = retrieve_batched(self.index, terms, qw_b, qw_l, self.params)
+        res = self._retrieve(terms, qw_b, qw_l)
         done = time.perf_counter()
         for i, r in enumerate(batch):
             r.ids, r.scores, r.t_done = res.ids[i], res.scores[i], done
@@ -87,6 +94,9 @@ class RetrievalServer:
     def run_workload(self, requests: list[Request], qps: float,
                      seed: int = 0) -> dict:
         """Poisson arrivals at ``qps``; synchronous single-host execution."""
+        if not requests:  # nothing to serve: no lat array to reduce
+            return {"n": 0, "mrt_ms": float("nan"), "p50_ms": float("nan"),
+                    "p99_ms": float("nan"), "qps_achieved": 0.0}
         rng = np.random.default_rng(seed)
         arrivals = np.cumsum(rng.exponential(1.0 / qps, len(requests)))
         t0 = time.perf_counter()

@@ -1,0 +1,304 @@
+"""Mesh-sharded retrieval: per-shard tile scans + collective top-k merge.
+
+The index is partitioned into contiguous tile ranges (``core.shard_plan``)
+laid out on a one-axis device mesh. Every shard runs the *same* executor
+step as the single-device engine (``core.traversal._tile_step``, planner
+from ``core.plan``) over its own tiles under ``shard_map``, carrying
+shard-local top-k queues; the final queues are ring-all-gathered
+(``dist.collectives.ring_gather_stack``) and merged with one stable top-k
+per queue. Stacking the gathered queues in shard order before the merge
+preserves the single-device stable-tie discipline: with the ``docid``
+schedule the concatenation enumerates candidates in exactly the global
+tile order, so for rank-safe configurations (alpha = beta = gamma) the
+merged Q_Rk is bit-identical to ``retrieve_batched`` — ids, scores and
+tie-breaks. Guided (rank-unsafe) configurations prune against thresholds
+whose trajectory depends on traversal order, so a shard's looser local
+theta can keep boundary docs the sequential traversal froze; heads agree,
+tails may differ within the usual guided tolerance.
+
+Threshold exchange (``exchange_every``): every E tiles the shards
+all-gather their Global queues and set a shared floor theta — the k-th
+best Global score across the union, i.e. the *exact* global theta at that
+point — so subsequent tile skips prune against the global queue rather
+than the local one. Thresholds only tighten, so the floor is always safe.
+
+Two execution paths share every formula:
+
+  - ``mesh`` path: ``shard_map`` over a mesh axis, ring-collective merge —
+    the multi-device deployment (and the 8-fake-device slow-lane test);
+  - emulation path (``mesh=None``): ``vmap`` over the stacked shard axis
+    with the identical merge math — runs any shard count on one device
+    and is bit-identical to the mesh path, which is what the fast-lane
+    parity tests pin down.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.plan import plan_query, tile_schedule
+from ..core.shard_plan import ShardedImpactIndex, shard_index
+from ..core.traversal import (STAT_KEYS, RetrievalResult, _init_carry,
+                              _tile_step)
+from ..core.twolevel import TwoLevelParams
+from ..dist.collectives import ring_gather_stack
+from .engine import RetrievalServer, ServerConfig
+
+
+def make_shard_mesh(n_shards: int, axis_name: str = "shard"):
+    """One-axis mesh over the first ``n_shards`` local devices."""
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"need {n_shards} devices for a {n_shards}-shard mesh, have "
+            f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n_shards} before jax initializes, or pass mesh=None "
+            f"for the single-device emulation path)")
+    return jax.sharding.Mesh(np.array(devs[:n_shards]), (axis_name,))
+
+
+def _merge_stacked(vals, ids, k: int):
+    """Merge shard-stacked queues [n, B, k] -> [B, k], shard-order stable."""
+    n, b, kk = vals.shape
+    v = jnp.moveaxis(vals, 0, 1).reshape(b, n * kk)
+    i = jnp.moveaxis(ids, 0, 1).reshape(b, n * kk)
+    top, idx = jax.lax.top_k(v, k)
+    return top, jnp.take_along_axis(i, idx, axis=1)
+
+
+def _global_theta(gv, k: int):
+    """k-th best Global score across the union of shard queues: [n,B,k]->[B]."""
+    n, b, kk = gv.shape
+    v = jnp.moveaxis(gv, 0, 1).reshape(b, n * kk)
+    return jax.lax.top_k(v, k)[0][:, -1]
+
+
+def _chunks(n_tiles: int, exchange_every: int):
+    if exchange_every <= 0 or exchange_every >= n_tiles:
+        return ((0, n_tiles),)
+    return tuple((c0, min(c0 + exchange_every, n_tiles))
+                 for c0 in range(0, n_tiles, exchange_every))
+
+
+def _plan_shard(tm_b, tm_l, sigma_b, sigma_l, q_terms, qw_b, qw_l, alpha,
+                *, tiles_per_shard, schedule):
+    """Batched planner for one shard: plans [B, ...], tile order [B, T]."""
+    def one(qt, qwb, qwl):
+        plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
+        tiles = tile_schedule(plan, tm_b, tm_l, alpha,
+                              tiles_per_shard, schedule)
+        return plan, tiles
+    return jax.vmap(one)(q_terms, qw_b, qw_l)
+
+
+def _scan_chunk(idx_arrays, n_real, plans, tiles_chunk, carries, th_floor,
+                alpha, beta, gamma, factor, *, statics):
+    """Advance all queries of one shard over a chunk of its tile order.
+
+    ``n_real`` is the shard's real tile count: shape-padding tiles (local
+    index >= n_real) are force-skipped so they touch no queue or stat."""
+    def one(plan, tiles_q, carry, floor):
+        def step(c, tile):
+            return _tile_step(idx_arrays, plan, c, tile,
+                              alpha, beta, gamma, factor,
+                              th_floor=floor, tile_valid=tile < n_real,
+                              **statics), None
+        c, _ = jax.lax.scan(step, carry, tiles_q)
+        return c
+    return jax.vmap(one)(plans, tiles_chunk, carries, th_floor)
+
+
+def _broadcast_carry(k: int, n: int, b: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n, b) + x.shape), _init_carry(k))
+
+
+def _rebase(ids, base):
+    return jnp.where(ids >= 0, ids + base, ids)
+
+
+@partial(jax.jit, static_argnames=(
+    "k", "kq", "pad_len", "tile_size", "bound_mode", "use_kernel",
+    "schedule", "tiles_per_shard", "n_shards", "exchange_every"))
+def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
+                           n_real, sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                           alpha, beta, gamma, factor,
+                           *, k, kq, pad_len, tile_size, bound_mode,
+                           use_kernel, schedule, tiles_per_shard, n_shards,
+                           exchange_every):
+    statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
+                   bound_mode=bound_mode, use_kernel=use_kernel)
+    b = q_terms.shape[0]
+    planner = partial(_plan_shard, tiles_per_shard=tiles_per_shard,
+                      schedule=schedule)
+    plans, tiles = jax.vmap(
+        lambda mb, ml: planner(mb, ml, sigma_b, sigma_l,
+                               q_terms, qw_b, qw_l, alpha))(tm_b, tm_l)
+    carries = _broadcast_carry(k, n_shards, b)
+    th_floor = jnp.full((b,), -jnp.inf, jnp.float32)
+    scan = partial(_scan_chunk, statics=statics)
+    for c0, c1 in _chunks(tiles_per_shard, exchange_every):
+        carries = jax.vmap(scan, in_axes=(0, 0, 0, 0, 0, None,
+                                          None, None, None, None))(
+            (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
+            n_real, plans, tiles[:, :, c0:c1], carries, th_floor,
+            alpha, beta, gamma, factor)
+        if exchange_every > 0 and c1 < tiles_per_shard:
+            th_floor = _global_theta(carries[0], k)
+    gv, gi, lv, li, rv, ri, st = carries
+    gi, li, ri = (jax.vmap(_rebase)(i, doc_base) for i in (gi, li, ri))
+    gv, gi = _merge_stacked(gv, gi, k)
+    lv, li = _merge_stacked(lv, li, k)
+    rv, ri = _merge_stacked(rv, ri, k)
+    return gv, gi, lv, li, rv, ri, st
+
+
+@partial(jax.jit, static_argnames=(
+    "k", "kq", "pad_len", "tile_size", "bound_mode", "use_kernel",
+    "schedule", "tiles_per_shard", "n_shards", "exchange_every",
+    "mesh", "axis_name"))
+def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
+                       n_real, sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                       alpha, beta, gamma, factor,
+                       *, k, kq, pad_len, tile_size, bound_mode, use_kernel,
+                       schedule, tiles_per_shard, n_shards, exchange_every,
+                       mesh, axis_name):
+    statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
+                   bound_mode=bound_mode, use_kernel=use_kernel)
+    scan = partial(_scan_chunk, statics=statics)
+
+    def local_fn(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
+                 sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                 alpha, beta, gamma, factor):
+        # sharded operands arrive with a local leading dim of 1
+        idx_arrays = (docids[0], w_b[0], w_l[0],
+                      tile_ptr[0], tm_b[0], tm_l[0])
+        b = q_terms.shape[0]
+        plans, tiles = _plan_shard(tm_b[0], tm_l[0], sigma_b, sigma_l,
+                                   q_terms, qw_b, qw_l, alpha,
+                                   tiles_per_shard=tiles_per_shard,
+                                   schedule=schedule)
+        carries = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (b,) + x.shape), _init_carry(k))
+        th_floor = jnp.full((b,), -jnp.inf, jnp.float32)
+        for c0, c1 in _chunks(tiles_per_shard, exchange_every):
+            carries = scan(idx_arrays, n_real[0], plans, tiles[:, c0:c1],
+                           carries, th_floor, alpha, beta, gamma, factor)
+            if exchange_every > 0 and c1 < tiles_per_shard:
+                gv_all = ring_gather_stack(carries[0], axis_name, n_shards)
+                th_floor = _global_theta(gv_all, k)
+        gv, gi, lv, li, rv, ri, st = carries
+        gi, li, ri = (_rebase(i, doc_base[0]) for i in (gi, li, ri))
+        merged = []
+        for vals, ids in ((gv, gi), (lv, li), (rv, ri)):
+            av = ring_gather_stack(vals, axis_name, n_shards)
+            ai = ring_gather_stack(ids, axis_name, n_shards)
+            merged.append(_merge_stacked(av, ai, k))
+        (gv, gi), (lv, li), (rv, ri) = merged
+        return gv, gi, lv, li, rv, ri, st[None]
+
+    sh = P(axis_name)
+    sh2 = P(axis_name, None)
+    sh3 = P(axis_name, None, None)
+    rep1, rep2 = P(None), P(None, None)
+    scal = P()
+    f = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(sh2, sh2, sh2, sh3, sh3, sh3, sh, sh,
+                  rep1, rep1, rep2, rep2, rep2,
+                  scal, scal, scal, scal),
+        out_specs=(rep2, rep2, rep2, rep2, rep2, rep2, sh3),
+        check_rep=False)
+    return f(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
+             sigma_b, sigma_l, q_terms, qw_b, qw_l,
+             alpha, beta, gamma, factor)
+
+
+def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
+                           params: TwoLevelParams, mesh=None,
+                           axis_name: str = "shard",
+                           use_kernel: bool = False,
+                           exchange_every: int = 0) -> RetrievalResult:
+    """Sharded batched retrieval over a stacked shard index.
+
+    ``mesh=None`` runs the vmap emulation path (any shard count on one
+    device, bit-identical to the mesh path); a one-axis mesh whose
+    ``axis_name`` size equals ``sharded.n_shards`` runs the collective
+    ``shard_map`` path. ``exchange_every=E`` all-gathers the exact global
+    theta_Gl every E tiles so shards skip against the global queue. Each
+    exchange round is an unrolled scan segment in the compiled program, so
+    the period must stay coarse (the chunk count is capped at 64).
+    """
+    if mesh is not None and mesh.shape[axis_name] != sharded.n_shards:
+        raise ValueError(
+            f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} but "
+            f"the index has {sharded.n_shards} shards")
+    n_chunks = len(_chunks(sharded.tiles_per_shard, exchange_every))
+    if n_chunks > 64:
+        raise ValueError(
+            f"exchange_every={exchange_every} yields {n_chunks} unrolled "
+            f"scan segments for {sharded.tiles_per_shard} tiles/shard; use "
+            f"a period >= {-(-sharded.tiles_per_shard // 64)} to bound "
+            f"compile size")
+    q_terms = jnp.asarray(q_terms, dtype=jnp.int32)
+    qw_b = jnp.asarray(qw_b, dtype=jnp.float32)
+    qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
+    kq = min(params.k, sharded.tile_size)
+    kw = dict(k=params.k, kq=kq, pad_len=sharded.pad_len,
+              tile_size=sharded.tile_size, bound_mode=params.bound_mode,
+              use_kernel=use_kernel, schedule=params.schedule,
+              tiles_per_shard=sharded.tiles_per_shard,
+              n_shards=sharded.n_shards, exchange_every=exchange_every)
+    args = (sharded.docids, sharded.w_b, sharded.w_l, sharded.tile_ptr,
+            sharded.tile_max_b, sharded.tile_max_l, sharded.doc_base,
+            sharded.n_real_tiles,
+            sharded.sigma_b, sharded.sigma_l, q_terms, qw_b, qw_l,
+            jnp.float32(params.alpha), jnp.float32(params.beta),
+            jnp.float32(params.gamma), jnp.float32(params.threshold_factor))
+    if mesh is None:
+        out = _sharded_impl_emulated(*args, **kw)
+    else:
+        out = _sharded_impl_mesh(*args, **kw, mesh=mesh, axis_name=axis_name)
+    gv, gi, lv, li, rv, ri, st = jax.tree_util.tree_map(np.asarray, out)
+    agg = st.sum(0)                                    # [B, 5]
+    stats = dict(zip(STAT_KEYS, agg.T))
+    b = q_terms.shape[0]
+    # padding tiles are force-skipped, so the real tile count is the
+    # denominator — skip rates stay comparable with retrieve_batched
+    stats["n_tiles"] = np.full(b, sharded.n_tiles, np.float32)
+    stats["shard_tiles_visited"] = st[:, :, 4].T       # [B, n_shards]
+    return RetrievalResult(ids=sharded.to_orig(ri), scores=rv,
+                           global_ids=sharded.to_orig(gi),
+                           local_ids=sharded.to_orig(li), stats=stats)
+
+
+class ShardedRetrievalServer(RetrievalServer):
+    """RetrievalServer whose batch executor is the mesh-sharded engine.
+
+    Accepts the same queue/batching config; the index is partitioned once
+    at construction. ``mesh=None`` serves through the emulation path."""
+
+    def __init__(self, index, params: TwoLevelParams,
+                 cfg: ServerConfig | None = None, *,
+                 n_shards: int | None = None, mesh=None,
+                 axis_name: str = "shard", use_kernel: bool = False,
+                 exchange_every: int = 0):
+        super().__init__(index, params, cfg)
+        if mesh is not None and n_shards is None:
+            n_shards = mesh.shape[axis_name]
+        self.sharded = shard_index(index, n_shards or 1)
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.use_kernel = use_kernel
+        self.exchange_every = exchange_every
+
+    def _retrieve(self, terms, qw_b, qw_l) -> RetrievalResult:
+        return shard_retrieve_batched(
+            self.sharded, terms, qw_b, qw_l, self.params, mesh=self.mesh,
+            axis_name=self.axis_name, use_kernel=self.use_kernel,
+            exchange_every=self.exchange_every)

@@ -30,8 +30,7 @@ def test_guided_score_matches_ref(nq, p, tile_size, block_s):
     offs, wb, wl = _tile_inputs(rng, nq, p, tile_size)
     essential = jnp.asarray(rng.random(nq) < 0.5, jnp.float32)
     prefix_beta = jnp.asarray(np.cumsum(rng.random(nq)), jnp.float32)
-    args = (offs, wb, wl, essential, prefix_beta,
-            jnp.float32(1.0), jnp.float32(2.0),
+    args = (offs, wb, wl, essential, prefix_beta, jnp.float32(2.0),
             jnp.float32(1.0), jnp.float32(0.3), jnp.float32(0.05))
     out_k = guided_score_tile(*args, tile_size=tile_size, block_s=block_s)
     out_r = ref.guided_score_tile_ref(*args, tile_size=tile_size)
@@ -46,8 +45,7 @@ def test_guided_score_param_sweep(alpha, beta, gamma, th_lo):
     offs, wb, wl = _tile_inputs(rng, 8, 64, 256)
     essential = jnp.asarray(rng.random(8) < 0.6, jnp.float32)
     prefix_beta = jnp.asarray(np.cumsum(rng.random(8)), jnp.float32)
-    args = (offs, wb, wl, essential, prefix_beta,
-            jnp.float32(0.0), jnp.float32(th_lo),
+    args = (offs, wb, wl, essential, prefix_beta, jnp.float32(th_lo),
             jnp.float32(alpha), jnp.float32(beta), jnp.float32(gamma))
     out_k = guided_score_tile(*args, tile_size=256, block_s=128)
     out_r = ref.guided_score_tile_ref(*args, tile_size=256)
@@ -80,12 +78,11 @@ def test_guided_score_matches_traversal_scorer(small_corpus):
     pad = lambda a, fill: jnp.pad(a, ((0, 0), (0, padp)),
                                   constant_values=fill)
     out_k = guided_score_tile(pad(offs, -1), pad(wb, 0), pad(wl, 0),
-                              essential, prefix_beta,
-                              jnp.float32(1.0), jnp.float32(2.0),
+                              essential, prefix_beta, jnp.float32(2.0),
                               jnp.float32(alpha), jnp.float32(beta),
                               jnp.float32(0.05), tile_size=256, block_s=256)
     out_r = ref.guided_score_tile_ref(offs, wb, wl, essential, prefix_beta,
-                                      jnp.float32(1.0), jnp.float32(2.0),
+                                      jnp.float32(2.0),
                                       jnp.float32(alpha), jnp.float32(beta),
                                       jnp.float32(0.05), tile_size=256)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),

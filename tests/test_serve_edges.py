@@ -91,6 +91,27 @@ def test_multiple_partial_batches_drain_in_order(served):
     assert stats["p99_ms"] >= stats["p50_ms"]
 
 
+def test_empty_workload_returns_zero_stats(served):
+    """run_workload([]) must not reduce over empty latency arrays."""
+    corpus, index = served
+    srv = RetrievalServer(index, twolevel.fast(k=10))
+    stats = srv.run_workload([], qps=100.0)
+    assert stats["n"] == 0
+    assert stats["qps_achieved"] == 0.0
+    assert np.isnan(stats["mrt_ms"]) and np.isnan(stats["p99_ms"])
+
+
+def test_default_config_not_shared_across_servers(served):
+    """The default ServerConfig must be per-instance: mutating one
+    server's config cannot leak into another's."""
+    corpus, index = served
+    a = RetrievalServer(index, twolevel.fast(k=10))
+    b = RetrievalServer(index, twolevel.fast(k=10))
+    assert a.cfg is not b.cfg
+    a.cfg.max_batch = 1
+    assert b.cfg.max_batch == ServerConfig().max_batch
+
+
 def test_empty_padded_request_is_harmless(served):
     """All-zero weights (fully padded request) completes without NaNs."""
     corpus, index = served
