@@ -4,15 +4,22 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow tier1 bench-smoke
+.PHONY: test test-fast test-slow test-api tier1 bench-smoke
 
 test: test-fast test-slow
 
+# Includes tests/test_retrieval_api.py, which exercises the engine
+# registry end-to-end for every registered engine name.
 test-fast:
 	$(PYTEST) -m "not slow"
 
 test-slow:
 	$(PYTEST) -m slow
+
+# Seconds-scale smoke of the unified search API alone (registry coverage,
+# facade parity, k-bucketing) — the quickest pre-commit signal.
+test-api:
+	$(PYTEST) -m "not slow" tests/test_retrieval_api.py
 
 # The exact tier-1 command from ROADMAP.md (everything, fail-fast).
 tier1:

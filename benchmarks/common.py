@@ -1,4 +1,10 @@
-"""Shared benchmark machinery: corpus/index caches, method runner, CSV."""
+"""Shared benchmark machinery: corpus/index/retriever caches, method
+runner, CSV. All methods run through the ``repro.retrieval.Retriever``
+facade — ``timed=True`` uses the ``sequential`` engine (per-query host
+latencies, the paper's regime), ``timed=False`` the ``batched`` engine.
+Retrievers are opened in exact-k mode (``k_buckets=None``): a benchmark
+sweeping k must measure the depth it names, not the bucket above it.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,8 +13,8 @@ import numpy as np
 
 from repro.core import build_index, twolevel
 from repro.core.metrics import evaluate_run, mean_and_p99
-from repro.core.traversal import retrieve_batched, retrieve_sequential
 from repro.data import make_corpus
+from repro.retrieval import Retriever
 
 # benchmark-scale corpus (kept moderate: single CPU core)
 N_DOCS = 32768
@@ -30,21 +36,30 @@ def index_for(preset: str, fill: str, seed: int = 0, tile: int = TILE,
     return build_index(c.merged(fill), tile_size=tile)
 
 
-def run_method(preset: str, fill: str, params, timed: bool = True,
-               seed: int = 0, mrr_cutoff: int = 10):
-    """Run one method config; returns metrics dict."""
+@functools.lru_cache(maxsize=64)
+def retriever_for(preset: str, fill: str, params, engine: str,
+                  seed: int = 0) -> Retriever:
+    """One facade per (index, params, engine); params hash by policy
+    fields, so threshold/schedule variants get distinct entries."""
+    return Retriever.open(index_for(preset, fill, seed), params,
+                          engine=engine, k_buckets=None)
+
+
+def run_method(preset: str, fill: str, params, k: int = 10,
+               timed: bool = True, seed: int = 0,
+               mrr_cutoff: int = 10):
+    """Run one method config at retrieval depth ``k``; returns metrics."""
     c = corpus(preset, seed)
-    idx = index_for(preset, fill, seed)
+    r = retriever_for(preset, fill, params,
+                      "sequential" if timed else "batched", seed)
+    resp = r.search(terms=c.queries, weights_b=c.q_weights_b,
+                    weights_l=c.q_weights_l, k=k)
     if timed:
-        res = retrieve_sequential(idx, c.queries, c.q_weights_b,
-                                  c.q_weights_l, params)
-        mrt, p99 = mean_and_p99(res.latencies_ms)
+        mrt, p99 = mean_and_p99(resp.latencies_ms)
     else:
-        res = retrieve_batched(idx, c.queries, c.q_weights_b,
-                               c.q_weights_l, params)
         mrt = p99 = float("nan")
-    m = evaluate_run(res.ids, c.qrels, params.k, mrr_cutoff)
-    st = res.stats
+    m = evaluate_run(resp.ids, c.qrels, k, mrr_cutoff)
+    st = resp.stats
     return {"mrr": m["mrr"], "recall": m["recall"], "ndcg": m["ndcg"],
             "mrt_ms": mrt, "p99_ms": p99,
             "tiles_visited": float(np.mean(st["tiles_visited"])),
@@ -55,14 +70,13 @@ def run_method(preset: str, fill: str, params, timed: bool = True,
 
 
 METHODS = {
-    "org": lambda k: twolevel.original(k=k),
-    "gt": lambda k: twolevel.gt(k=k),
-    "gti": lambda k: twolevel.gti(k=k),
-    "2gti_acc": lambda k: twolevel.accurate(k=k),
-    "2gti_fast": lambda k: twolevel.fast(k=k),
-    "2gti_fast_impact": lambda k: twolevel.fast(k=k).replace(
-        schedule="impact"),
-    "linear": lambda k: twolevel.linear_combination(k=k),
+    "org": twolevel.original,
+    "gt": twolevel.gt,
+    "gti": twolevel.gti,
+    "2gti_acc": twolevel.accurate,
+    "2gti_fast": twolevel.fast,
+    "2gti_fast_impact": lambda: twolevel.fast().replace(schedule="impact"),
+    "linear": twolevel.linear_combination,
 }
 
 

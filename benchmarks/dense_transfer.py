@@ -8,9 +8,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dense_guided import (build_dense_index, exhaustive_dense,
-                                     retrieve_dense)
+from repro.core.dense_guided import build_dense_index, exhaustive_dense
 from repro.core.twolevel import TwoLevelParams
+from repro.retrieval import Retriever
 
 from .common import emit
 
@@ -29,16 +29,17 @@ def run(out) -> None:
     qs /= np.linalg.norm(qs, axis=1, keepdims=True)
 
     for beta in (0.0, 0.2, 0.4, 0.6, 1.0):
-        p = TwoLevelParams(alpha=1.0, beta=beta, gamma=0.0, k=10)
-        rec, frac, t0 = 0.0, 0.0, time.time()
-        for q in qs:
-            q = jnp.asarray(q)
-            _, ids, st = retrieve_dense(index, q, p)
-            _, eids = exhaustive_dense(index, q, 10)
-            rec += len(set(ids.tolist()) & set(eids.tolist())) / 10
+        p = TwoLevelParams(alpha=1.0, beta=beta, gamma=0.0)
+        r = Retriever.open(index, p, engine="dense")
+        t0 = time.time()
+        resp = r.search(dense=qs, k=10)
         ms = (time.time() - t0) / len(qs) * 1e3
-        for q in qs[:4]:
-            _, _, st = retrieve_dense(index, jnp.asarray(q), p)
-            frac += st["candidates_fully_scored"] / st["n_candidates"] / 4
+        rec = 0.0
+        for i, q in enumerate(qs):
+            _, eids = exhaustive_dense(index, jnp.asarray(q), 10)
+            rec += len(set(resp.ids[i].tolist())
+                       & set(eids.tolist())) / 10
+        frac = float(np.mean(resp.stats["candidates_fully_scored"]
+                             / resp.stats["n_candidates"]))
         out(emit(f"dense_transfer/beta{beta}", ms,
                  {"recall10": rec / len(qs), "fully_scored_frac": frac}))

@@ -12,7 +12,7 @@ def run(out) -> None:
     for method, fill in (("org", "scaled"), ("gti", "zero"),
                          ("2gti_acc", "scaled")):
         for k in KS:
-            r = run_method("splade_like", fill, METHODS[method](k),
+            r = run_method("splade_like", fill, METHODS[method](), k=k,
                            timed=False)
             out(emit(f"figure1/{method}/k{k}", float("nan"),
                      {"recall_at_k": r["recall"], "mrr10": r["mrr"]}))

@@ -10,17 +10,17 @@ from .common import emit, run_method
 
 def run(out) -> None:
     for a in (1.0, 0.7, 0.4, 0.0):
-        p = twolevel.TwoLevelParams(alpha=a, beta=1.0, gamma=0.05, k=10)
+        p = twolevel.TwoLevelParams(alpha=a, beta=1.0, gamma=0.05)
         r = run_method("splade_like", "scaled", p)
         out(emit(f"figure3/alpha_sweep/a{a}", r["mrt_ms"],
                  {"mrr": r["mrr"], "recall": r["recall"]}))
     for b in (1.0, 0.6, 0.3, 0.0):
-        p = twolevel.TwoLevelParams(alpha=1.0, beta=b, gamma=0.05, k=10)
+        p = twolevel.TwoLevelParams(alpha=1.0, beta=b, gamma=0.05)
         r = run_method("splade_like", "scaled", p)
         out(emit(f"figure3/beta_sweep/b{b}", r["mrt_ms"],
                  {"mrr": r["mrr"], "recall": r["recall"]}))
     for f in (1.0, 0.9, 0.8, 0.7):
-        p = twolevel.gti(k=10).replace(threshold_factor=f)
+        p = twolevel.gti().replace(threshold_factor=f)
         r = run_method("splade_like", "scaled", p)
         out(emit(f"figure3/underestimate/F{f}", r["mrt_ms"],
                  {"mrr": r["mrr"], "recall": r["recall"]}))

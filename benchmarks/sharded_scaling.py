@@ -13,8 +13,9 @@ math, no cross-device traffic) for larger shard counts.
 
 Rows: ``sharded/<method>/s<shards>_e<exchange>`` with per-query latency,
 throughput, mean tiles visited per shard, and the max |score delta| vs
-single-device ``retrieve_batched`` (0 for rank-safe configs by
-construction; the parity *tests* pin bit-identity).
+the single-device ``batched`` engine (0 for rank-safe configs by
+construction; the parity *tests* pin bit-identity). Both sides run
+through the ``repro.retrieval.Retriever`` facade.
 """
 from __future__ import annotations
 
@@ -34,10 +35,9 @@ import numpy as np  # noqa: E402
 
 from repro.core import build_index, twolevel  # noqa: E402
 from repro.core.shard_plan import shard_index  # noqa: E402
-from repro.core.traversal import retrieve_batched  # noqa: E402
 from repro.data import make_corpus  # noqa: E402
-from repro.serve.sharded import (make_shard_mesh,  # noqa: E402
-                                 shard_retrieve_batched)
+from repro.retrieval import Retriever  # noqa: E402
+from repro.serve.sharded import make_shard_mesh  # noqa: E402
 
 try:  # package-relative when driven by benchmarks.run
     from .common import emit
@@ -56,23 +56,23 @@ def run(out, smoke: bool = False) -> None:
     shard_counts = (1,) if smoke else (1, 2, 4, 8)
     exchanges = (0,) if smoke else (0, 2)
     reps = 1 if smoke else 3
-    methods = [("fast_docid", twolevel.fast(k=10))]
+    methods = [("fast_docid", twolevel.fast())]
     if not smoke:
         methods.append(("fast_impact",
-                        twolevel.fast(k=10).replace(schedule="impact")))
+                        twolevel.fast().replace(schedule="impact")))
+    queries = dict(terms=q[0], weights_b=q[1], weights_l=q[2])
     for name, params in methods:
-        ref = retrieve_batched(index, *q, params)
+        ref = Retriever.open(index, params).search(**queries, k=10)
         for ns in shard_counts:
             sharded = shard_index(index, ns)
             mesh = make_shard_mesh(ns) if ns <= n_dev else None
             for exch in exchanges:
-                def call():
-                    return shard_retrieve_batched(
-                        sharded, *q, params, mesh=mesh, exchange_every=exch)
-                res = call()  # compile outside the timed region
+                r = Retriever.open(sharded, params, engine="sharded",
+                                   mesh=mesh, exchange_every=exch)
+                res = r.search(**queries, k=10)  # compile untimed
                 t0 = time.perf_counter()
                 for _ in range(reps):
-                    res = call()
+                    res = r.search(**queries, k=10)
                 dt = (time.perf_counter() - t0) / reps
                 per_shard = res.stats["shard_tiles_visited"].mean(0)
                 delta = float(np.abs(res.scores - ref.scores).max())

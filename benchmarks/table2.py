@@ -35,7 +35,7 @@ def run(out) -> None:
                      {"mrr": m["mrr"], "recall": m["recall"]}))
             for row, fill in ROWS:
                 method = row.split("/")[0]
-                r = run_method(preset, fill, METHODS[method](k))
+                r = run_method(preset, fill, METHODS[method](), k=k)
                 out(emit(f"table2/{preset}/{row}/k{k}", r["mrt_ms"],
                          {"mrr": r["mrr"], "recall": r["recall"],
                           "p99_ms": r["p99_ms"],

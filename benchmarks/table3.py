@@ -11,7 +11,7 @@ from .common import METHODS, emit, run_method
 def run(out) -> None:
     # threshold over-estimation on org (rank-unsafe speedup)
     for f in (1.0, 1.1, 1.3, 1.5):
-        p = twolevel.original(k=10).replace(threshold_factor=f)
+        p = twolevel.original().replace(threshold_factor=f)
         r = run_method("splade_like", "scaled", p)
         out(emit(f"table3/overestimate/F{f}", r["mrt_ms"],
                  {"mrr": r["mrr"], "recall": r["recall"],
@@ -19,7 +19,7 @@ def run(out) -> None:
     # alignment fillings
     for method in ("gti", "2gti_acc"):
         for fill in ("zero", "one", "scaled"):
-            r = run_method("splade_like", fill, METHODS[method](10))
+            r = run_method("splade_like", fill, METHODS[method]())
             out(emit(f"table3/{method}/{fill}", r["mrt_ms"],
                      {"mrr": r["mrr"], "recall": r["recall"],
                       "p99_ms": r["p99_ms"],

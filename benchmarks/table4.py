@@ -33,11 +33,11 @@ def run(out) -> None:
     out(emit("table4/two_stage_R2", float("nan"),
              {"mrr": m["mrr"], "recall": m["recall"]}))
     rows = [
-        ("gti_s", twolevel.gti(k=10, gamma=GAMMA)),
-        ("2gti_beta_gamma", twolevel.TwoLevelParams(1.0, GAMMA, GAMMA, 10)),
-        ("2gti_accurate", twolevel.accurate(k=10, gamma=GAMMA)),
-        ("2gti_fast", twolevel.fast(k=10, gamma=GAMMA)),
-        ("linear_comb", twolevel.linear_combination(k=10, gamma=GAMMA)),
+        ("gti_s", twolevel.gti(gamma=GAMMA)),
+        ("2gti_beta_gamma", twolevel.TwoLevelParams(1.0, GAMMA, GAMMA)),
+        ("2gti_accurate", twolevel.accurate(gamma=GAMMA)),
+        ("2gti_fast", twolevel.fast(gamma=GAMMA)),
+        ("linear_comb", twolevel.linear_combination(gamma=GAMMA)),
     ]
     for name, p in rows:
         r = run_method("splade_like", "scaled", p)

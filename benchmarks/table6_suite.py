@@ -16,7 +16,7 @@ def run(out) -> None:
     for preset, seed in SUITE:
         for method in agg:
             fill = "zero" if method == "gti" else "scaled"
-            r = run_method(preset, fill, METHODS[method](10), seed=seed)
+            r = run_method(preset, fill, METHODS[method](), seed=seed)
             agg[method]["ndcg"].append(r["ndcg"])
             agg[method]["mrt"].append(r["mrt_ms"])
             out(emit(f"table6/{preset}_s{seed}/{method}", r["mrt_ms"],

@@ -12,9 +12,9 @@ def run(out) -> None:
     for k in (10, 20, 100):
         for bound in ("list", "tile"):
             for sched in ("docid", "impact"):
-                p = twolevel.fast(k=k).replace(bound_mode=bound,
-                                               schedule=sched)
-                r = run_method("unicoil_like", "scaled", p)
+                p = twolevel.fast().replace(bound_mode=bound,
+                                            schedule=sched)
+                r = run_method("unicoil_like", "scaled", p, k=k)
                 out(emit(f"table7/{bound}_{sched}/k{k}", r["mrt_ms"],
                          {"mrr": r["mrr"], "recall": r["recall"],
                           "tiles": r["tiles_visited"],

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 from repro.core import build_index, twolevel
 from repro.core.metrics import evaluate_run, mean_and_p99
-from repro.core.traversal import retrieve_sequential
 from repro.data import make_corpus
+from repro.retrieval import Retriever
 
 from .common import emit
 
@@ -21,11 +21,12 @@ def run(out) -> None:
                              n_queries=16, n_q_terms=n_terms, seed=5)
         index = build_index(corpus.merged("scaled"), tile_size=512)
         for bound in ("list", "tile"):
-            p = twolevel.fast(k=10).replace(bound_mode=bound,
-                                            schedule="impact")
-            res = retrieve_sequential(index, corpus.queries,
-                                      corpus.q_weights_b,
-                                      corpus.q_weights_l, p)
+            p = twolevel.fast().replace(bound_mode=bound,
+                                        schedule="impact")
+            r = Retriever.open(index, p, engine="sequential")
+            res = r.search(terms=corpus.queries,
+                           weights_b=corpus.q_weights_b,
+                           weights_l=corpus.q_weights_l, k=10)
             m = evaluate_run(res.ids, corpus.qrels, 10)
             mrt, p99 = mean_and_p99(res.latencies_ms)
             out(emit(f"table8/qlen{n_terms}/{bound}", mrt,

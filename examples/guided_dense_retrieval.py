@@ -8,13 +8,12 @@ norm-clustered (the docid-reordering analogue) so block bounds are tight.
 """
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dense_guided import (build_dense_index, exhaustive_dense,
-                                     retrieve_dense)
+from repro.core.dense_guided import build_dense_index, exhaustive_dense
 from repro.core.twolevel import TwoLevelParams
+from repro.retrieval import Retriever
 
 
 def main() -> None:
@@ -33,18 +32,21 @@ def main() -> None:
     qs = rng.standard_normal((16, d)).astype(np.float32)
     qs /= np.linalg.norm(qs, axis=1, keepdims=True)
 
-    configs = [("exhaustive (a=b=g)", TwoLevelParams(0.0, 0.0, 0.0, k=10)),
-               ("guided (a=1, b=0.3)", TwoLevelParams(1.0, 0.3, 0.0, k=10)),
-               ("guided (a=1, b=1)", TwoLevelParams(1.0, 1.0, 0.0, k=10))]
+    configs = [("exhaustive (a=b=g)", TwoLevelParams(0.0, 0.0, 0.0)),
+               ("guided (a=1, b=0.3)", TwoLevelParams(1.0, 0.3, 0.0)),
+               ("guided (a=1, b=1)", TwoLevelParams(1.0, 1.0, 0.0))]
     for name, p in configs:
-        t0, recall, scored = time.time(), 0.0, 0.0
-        for q in qs:
-            q = jnp.asarray(q)
-            vals, ids, st = retrieve_dense(index, q, p)
-            _, eids = exhaustive_dense(index, q, 10)
-            recall += len(set(ids.tolist()) & set(eids.tolist())) / 10
-            scored += st["candidates_fully_scored"] / index.emb.shape[0]
+        r = Retriever.open(index, p, engine="dense")
+        t0 = time.time()
+        res = r.search(dense=qs, k=10)
         dt = (time.time() - t0) / len(qs) * 1e3
+        recall = 0.0
+        for i, q in enumerate(qs):
+            _, eids = exhaustive_dense(index, jnp.asarray(q), 10)
+            recall += len(set(res.ids[i].tolist())
+                          & set(eids.tolist())) / 10
+        scored = float(np.sum(res.stats["candidates_fully_scored"]
+                              / index.emb.shape[0]))
         print(f"{name:22s} recall@10={recall/len(qs):.3f} "
               f"fully-scored={scored/len(qs):6.1%}  {dt:6.1f} ms/q")
 

@@ -1,5 +1,6 @@
 """Quickstart: build a misaligned synthetic corpus, align the BM25 index,
-and compare MaxScore (org) vs GTI vs 2GTI on relevance + latency.
+and compare MaxScore (org) vs GTI vs 2GTI on relevance + latency through
+the unified search API (`repro.retrieval.Retriever`).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,8 +9,8 @@ import numpy as np
 from repro.core import build_index, twolevel
 from repro.core.align import misalignment_fraction
 from repro.core.metrics import evaluate_run, mean_and_p99
-from repro.core.traversal import retrieve_sequential
 from repro.data import make_corpus
+from repro.retrieval import Retriever
 
 
 def main() -> None:
@@ -19,19 +20,22 @@ def main() -> None:
     print(f"corpus: {corpus.n_docs} docs, misalignment {mis:.1%} "
           f"(SPLADE-like regime)\n")
     methods = [
-        ("MaxScore (org)", "scaled", twolevel.original(k=10)),
-        ("GTI  (zero-fill)", "zero", twolevel.gti(k=10)),
-        ("GTI  (scaled)", "scaled", twolevel.gti(k=10)),
-        ("2GTI-Accurate", "scaled", twolevel.accurate(k=10)),
+        ("MaxScore (org)", "scaled", twolevel.original()),
+        ("GTI  (zero-fill)", "zero", twolevel.gti()),
+        ("GTI  (scaled)", "scaled", twolevel.gti()),
+        ("2GTI-Accurate", "scaled", twolevel.accurate()),
         ("2GTI-Fast", "scaled",
-         twolevel.fast(k=10).replace(schedule="impact")),
+         twolevel.fast().replace(schedule="impact")),
     ]
+    # one index per fill mode, shared by every method that uses it
+    indexes = {fill: build_index(corpus.merged(fill), tile_size=512)
+               for fill in {fill for _, fill, _ in methods}}
     print(f"{'method':18s} {'MRR@10':>7s} {'R@10':>6s} {'MRT':>8s}"
           f" {'P99':>8s} {'tiles':>7s}")
     for name, fill, params in methods:
-        index = build_index(corpus.merged(fill), tile_size=512)
-        res = retrieve_sequential(index, corpus.queries, corpus.q_weights_b,
-                                  corpus.q_weights_l, params)
+        r = Retriever.open(indexes[fill], params, engine="sequential")
+        res = r.search(terms=corpus.queries, weights_b=corpus.q_weights_b,
+                       weights_l=corpus.q_weights_l, k=10)
         m = evaluate_run(res.ids, corpus.qrels, 10)
         mrt, p99 = mean_and_p99(res.latencies_ms)
         tiles = res.stats["tiles_visited"].mean()

@@ -27,12 +27,13 @@ def main() -> None:
     index = build_index(corpus.merged("scaled"), tile_size=1024)
 
     for name, params in [
-            ("GTI", twolevel.gti(k=10)),
-            ("2GTI-Fast", twolevel.fast(k=10)),
+            ("GTI", twolevel.gti()),
+            ("2GTI-Fast", twolevel.fast()),
             ("2GTI-Fast+impact",
-             twolevel.fast(k=10).replace(schedule="impact"))]:
+             twolevel.fast().replace(schedule="impact"))]:
         srv = RetrievalServer(index, params,
-                              ServerConfig(max_batch=16, max_wait_ms=2.0))
+                              ServerConfig(max_batch=16, max_wait_ms=2.0),
+                              k=10)
         reqs = []
         for i in range(args.n_requests):
             qi = i % len(corpus.queries)

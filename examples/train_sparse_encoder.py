@@ -24,8 +24,8 @@ import numpy as np
 from repro.core import build_index, merge_models, twolevel
 from repro.core.metrics import evaluate_run, mean_and_p99
 from repro.core.sparse import from_coo
-from repro.core.traversal import retrieve_sequential
 from repro.core.bm25 import build_bm25
+from repro.retrieval import Retriever
 from repro.data.stream import pair_batch
 from repro.models.transformer import (TransformerConfig, init_params,
                                       splade_encode)
@@ -142,10 +142,11 @@ def main() -> None:
         q_wl[qi] = q_reps[qi, top]
     q_wb = np.ones_like(q_wl)
 
-    for name, p in [("MaxScore-org", twolevel.original(k=10)),
-                    ("2GTI-Fast", twolevel.fast(k=10)
+    for name, p in [("MaxScore-org", twolevel.original()),
+                    ("2GTI-Fast", twolevel.fast()
                      .replace(schedule="impact"))]:
-        res = retrieve_sequential(index, q_terms, q_wb, q_wl, p)
+        r = Retriever.open(index, p, engine="sequential")
+        res = r.search(terms=q_terms, weights_b=q_wb, weights_l=q_wl, k=10)
         m = evaluate_run(res.ids, qrels, 10)
         mrt, p99 = mean_and_p99(res.latencies_ms)
         print(f"{name:14s} MRR@10={m['mrr']:.3f} R@10={m['recall']:.3f} "

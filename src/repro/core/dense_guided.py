@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .twolevel import TwoLevelParams
+from .twolevel import TwoLevelParams, resolve_k
 
 NEG = jnp.float32(-jnp.inf)
 
@@ -122,13 +122,15 @@ def _retrieve(emb, bmax, bmin, q, alpha, beta, gamma,
 
 
 def retrieve_dense(index: DenseGuidedIndex, q: jax.Array,
-                   params: TwoLevelParams):
-    """Top-k candidates for one query. Returns (scores, ids, stats)."""
+                   params: TwoLevelParams, k: int | None = None):
+    """Top-k candidates for one query. Returns (scores, ids, stats).
+    ``k`` is the per-call retrieval depth (legacy ``params.k`` fallback)."""
     q = index.rotate_query(q.astype(index.emb.dtype))
     rv, ri, scored = _retrieve(
         index.emb, index.bmax, index.bmin, q,
         jnp.float32(params.alpha), jnp.float32(params.beta),
-        jnp.float32(params.gamma), k=params.k, block_size=index.block_size,
+        jnp.float32(params.gamma), k=resolve_k(params, k),
+        block_size=index.block_size,
         d_cheap=index.d_cheap, n_blocks=index.n_blocks)
     stats = {"candidates_fully_scored": float(scored),
              "n_candidates": index.emb.shape[0]}

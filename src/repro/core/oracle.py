@@ -15,7 +15,7 @@ import heapq
 import numpy as np
 
 from .align import MergedPostings
-from .twolevel import TwoLevelParams
+from .twolevel import TwoLevelParams, resolve_k
 
 
 class _TopK:
@@ -76,11 +76,12 @@ def two_stage(merged: MergedPostings, q_terms, qw_b, qw_l, alpha: float,
 
 
 def daat_2gti(merged: MergedPostings, q_terms, qw_b, qw_l,
-              params: TwoLevelParams):
-    """Paper-faithful sequential 2GTI. Returns (ids, scores, stats)."""
+              params: TwoLevelParams, k: int | None = None):
+    """Paper-faithful sequential 2GTI. Returns (ids, scores, stats).
+    ``k`` is the per-call retrieval depth (legacy ``params.k`` fallback)."""
     a, b, g = params.alpha, params.beta, params.gamma
     F = params.threshold_factor
-    k = params.k
+    k = resolve_k(params, k)
     nq = len(q_terms)
     lists = []
     sig_b = np.zeros(nq, np.float64)

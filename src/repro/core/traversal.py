@@ -45,7 +45,7 @@ import numpy as np
 from .index import BlockedImpactIndex
 from .plan import (QueryPlan, combine, essential_terms, freeze_bounds,
                    plan_query, term_bounds, tile_schedule, tile_upper_bounds)
-from .twolevel import TwoLevelParams
+from .twolevel import TwoLevelParams, resolve_k
 
 NEG_INF = jnp.float32(-jnp.inf)
 
@@ -276,22 +276,26 @@ def _retrieve_batched_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
 
 def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
                      params: TwoLevelParams,
-                     use_kernel: bool = False) -> RetrievalResult:
+                     use_kernel: bool = False,
+                     k: int | None = None) -> RetrievalResult:
     """Batched retrieval: q_terms [B, Nq] int32 (pad with qw = 0).
 
-    ``use_kernel=True`` routes tile scoring through the fused Pallas
-    guided_score kernel (interpret mode on CPU; native on TPU)."""
+    ``k`` is the retrieval depth for this call (falls back to the
+    deprecated ``params.k`` stash, then DEFAULT_K). ``use_kernel=True``
+    routes tile scoring through the fused Pallas guided_score kernel
+    (interpret mode on CPU; native on TPU)."""
     q_terms = jnp.asarray(q_terms, dtype=jnp.int32)
     qw_b = jnp.asarray(qw_b, dtype=jnp.float32)
     qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
-    kq = min(params.k, index.tile_size)
+    k = resolve_k(params, k)
+    kq = min(k, index.tile_size)
     out = _retrieve_batched_impl(
         index.docids, index.w_b, index.w_l, index.tile_ptr,
         index.tile_max_b, index.tile_max_l, index.sigma_b, index.sigma_l,
         q_terms, qw_b, qw_l,
         jnp.float32(params.alpha), jnp.float32(params.beta),
         jnp.float32(params.gamma), jnp.float32(params.threshold_factor),
-        k=params.k, kq=kq, pad_len=index.pad_len, tile_size=index.tile_size,
+        k=k, kq=kq, pad_len=index.pad_len, tile_size=index.tile_size,
         n_tiles=index.n_tiles, bound_mode=params.bound_mode,
         schedule=params.schedule, use_kernel=use_kernel)
     gv, gi, lv, li, rv, ri, st = jax.tree_util.tree_map(np.asarray, out)
@@ -328,16 +332,18 @@ def _tile_step_jit(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
 
 def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
                         params: TwoLevelParams,
-                        warmup: bool = True) -> RetrievalResult:
+                        warmup: bool = True,
+                        k: int | None = None) -> RetrievalResult:
     """Host-driven per-query traversal with physical tile skipping + timing.
 
     Mirrors the paper's single-threaded CPU latency regime: skipped tiles
     cost nothing (the gather/score call is never issued). Planning runs
     through the same ``core.plan`` functions as the batched engine; only
     the skip *decision* is evaluated on host so it can elide work.
+    ``k`` is the per-call retrieval depth (legacy ``params.k`` fallback).
     """
     B = len(q_terms)
-    k = params.k
+    k = resolve_k(params, k)
     kq = min(k, index.tile_size)
     alpha, beta, gamma = params.alpha, params.beta, params.gamma
     factor = params.threshold_factor

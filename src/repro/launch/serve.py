@@ -2,25 +2,32 @@
 
     PYTHONPATH=src python -m repro.launch.serve --preset splade_like
     PYTHONPATH=src python -m repro.launch.serve --shards 4 --host-devices 4
+    repro-serve --engine kernel --k 100        # installed console script
 
-``--shards N`` serves through the mesh-sharded engine: a one-axis mesh
-when N devices exist (``--host-devices`` fakes them on CPU), else the
+``--engine`` picks any name from the ``repro.retrieval`` registry
+(``--shards N > 1`` implies ``sharded``): the server always goes through
+the ``Retriever`` facade. ``--shards N`` uses a one-axis mesh when N
+devices exist (``--host-devices`` fakes them on CPU), else the
 single-device vmap emulation path (bit-identical results).
+
+Heavy imports live inside ``main`` so ``cli`` (the ``repro-serve`` entry
+point) can fix up ``XLA_FLAGS`` before jax initializes.
 """
 import argparse
 import os
 import sys
 
 
-def _preparse_host_devices() -> None:
+def _preparse_host_devices(argv=None) -> None:
     """--host-devices must reach XLA before the backend initializes, i.e.
     before any repro import triggers a jnp array build. Appends to any
     pre-existing XLA_FLAGS; malformed values fall through to argparse; a
     conflicting pre-existing device count wins, with a warning."""
+    argv = sys.argv if argv is None else argv
     n = None
-    for i, tok in enumerate(sys.argv):
-        if tok == "--host-devices" and i + 1 < len(sys.argv):
-            n = sys.argv[i + 1]
+    for i, tok in enumerate(argv):
+        if tok == "--host-devices" and i + 1 < len(argv):
+            n = argv[i + 1]
         elif tok.startswith("--host-devices="):
             n = tok.split("=", 1)[1]
     if n is None or not n.isdigit():
@@ -35,27 +42,29 @@ def _preparse_host_devices() -> None:
         f"{prev} --xla_force_host_platform_device_count={n}".strip())
 
 
-if __name__ == "__main__":  # importers must not get argv-driven env edits
-    _preparse_host_devices()
-
-import jax  # noqa: E402
-
-from repro.core import build_index, twolevel  # noqa: E402
-from repro.data import make_corpus  # noqa: E402
-from repro.serve import (Request, RetrievalServer, ServerConfig,  # noqa: E402
-                         ShardedRetrievalServer, make_shard_mesh)
-
-
 def main() -> None:
+    import jax
+
+    from repro.core import build_index, twolevel
+    from repro.data import make_corpus
+    from repro.retrieval import engine_names
+    from repro.serve import (Request, RetrievalServer, ServerConfig,
+                             ShardedRetrievalServer, make_shard_mesh)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="splade_like")
     ap.add_argument("--docs", type=int, default=16384)
     ap.add_argument("--qps", type=float, default=200.0)
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--beta", type=float, default=0.3)
-    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--k", type=int, default=10,
+                    help="retrieval depth per request")
+    ap.add_argument("--engine", default="batched",
+                    choices=sorted(set(engine_names()) - {"dense"}),
+                    help="retrieval engine (registry name)")
     ap.add_argument("--shards", type=int, default=1,
-                    help="partition the index over N tile-range shards")
+                    help="partition the index over N tile-range shards "
+                         "(implies --engine sharded)")
     ap.add_argument("--host-devices", type=int, default=None,
                     help="fake N host devices (must be set at launch)")
     ap.add_argument("--exchange-every", type=int, default=0,
@@ -64,19 +73,20 @@ def main() -> None:
     corpus = make_corpus(args.preset, n_docs=args.docs, n_terms=4096,
                          n_queries=64)
     index = build_index(corpus.merged("scaled"), tile_size=1024)
-    params = twolevel.fast(k=args.k, beta=args.beta).replace(
-        schedule="impact")
-    if args.shards > 1:
+    params = twolevel.fast(beta=args.beta).replace(schedule="impact")
+    if args.shards > 1 or args.engine == "sharded":
         mesh = (make_shard_mesh(args.shards)
-                if len(jax.devices()) >= args.shards else None)
+                if 1 < args.shards <= len(jax.devices()) else None)
         srv = ShardedRetrievalServer(
             index, params, ServerConfig(max_batch=16),
             n_shards=args.shards, mesh=mesh,
-            exchange_every=args.exchange_every)
+            exchange_every=args.exchange_every, k=args.k)
         path = "mesh" if mesh is not None else "emulated"
         print(f"# sharded serving: {args.shards} shards ({path})")
     else:
-        srv = RetrievalServer(index, params, ServerConfig(max_batch=16))
+        srv = RetrievalServer(index, params, ServerConfig(max_batch=16),
+                              engine=args.engine, k=args.k)
+        print(f"# serving engine: {args.engine}")
     reqs = [Request(corpus.queries[i % 64], corpus.q_weights_b[i % 64],
                     corpus.q_weights_l[i % 64])
             for i in range(args.requests)]
@@ -84,5 +94,11 @@ def main() -> None:
     print(stats)
 
 
-if __name__ == "__main__":
+def cli() -> None:
+    """`repro-serve` console entry: env fix-up, then the real main."""
+    _preparse_host_devices()
     main()
+
+
+if __name__ == "__main__":
+    cli()

@@ -1,0 +1,25 @@
+"""Unified public search API over the 2GTI traversal engines.
+
+The paper's central tradeoff — pruning aggressiveness vs. relevance — is
+swept over retrieval depth *k* and engine variant; this package is the
+one seam those sweeps (and every serving/scaling layer) go through:
+
+  - :mod:`contract` — ``SearchRequest`` / ``SearchResponse`` with
+    per-call ``k`` and ``threshold_factor``; ``K_BUCKETS`` static-shape
+    depth buckets;
+  - :mod:`engines` — the ``Engine`` protocol and string-keyed registry
+    (``batched`` / ``kernel`` / ``sequential`` / ``sharded`` / ``dense``),
+    all driven by the single ``core.plan`` planner;
+  - :mod:`retriever` — the ``Retriever`` facade
+    (``Retriever.open(index, params, engine=...)`` → ``.search(...)``)
+    handling padding, k-bucketing, and engine dispatch.
+
+Legacy entry points (``core.traversal.retrieve_batched`` / ``_sequential``,
+``serve.sharded.shard_retrieve_batched``, ``core.dense_guided.
+retrieve_dense``) remain as thin bit-identical wrappers the engines call.
+"""
+from .contract import (K_BUCKETS, SearchRequest, SearchResponse,  # noqa: F401
+                       bucket_k)
+from .engines import (Engine, engine_names, get_engine,  # noqa: F401
+                      register_engine)
+from .retriever import Retriever  # noqa: F401

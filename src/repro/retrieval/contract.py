@@ -1,0 +1,79 @@
+"""Request/response contract of the unified search API.
+
+One wire format for every engine: a :class:`SearchRequest` carries the
+query batch plus the *query-time* knobs — retrieval depth ``k`` and an
+optional ``threshold_factor`` override — while :class:`TwoLevelParams`
+keeps only the pruning *policy* (alpha/beta/gamma, bounds, schedule).
+A :class:`SearchResponse` is uniform across engines: original-space doc
+ids, RankScores, the engine's stat counters, and wall-clock latency.
+
+k-bucketing: per-request ``k`` is executed at the smallest bucket
+>= k (``K_BUCKETS``) and the response is truncated back, so sweeping k
+at query time does not recompile the jitted traversal — one compile per
+bucket, not per distinct k. For rank-safe configurations the truncated
+prefix is bit-identical to running at exactly ``k`` (the exact top-k is
+prefix-closed under the stable tie discipline); guided configurations
+prune against the k-th threshold, so exact-k semantics require ``k`` to
+sit on a bucket (or an exact-mode retriever with ``k_buckets=None``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Default execution depths. Chosen to cover the paper's sweep (Table 2 /
+# Figure 1 use k in {10, ..., 1000}); anything above the largest bucket
+# executes at its exact value.
+K_BUCKETS = (10, 100, 1000)
+
+
+def bucket_k(k: int, buckets=K_BUCKETS) -> int:
+    """Smallest bucket >= k; k itself beyond the largest bucket.
+    ``buckets=None`` disables bucketing (exact-k execution)."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if buckets:
+        for b in buckets:
+            if k <= b:
+                return b
+    return k
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One retrieval call: a query batch plus query-time knobs.
+
+    Sparse engines read ``terms``/``weights_b``/``weights_l`` ([B, Nq]
+    arrays or ragged per-query lists — the Retriever pads ragged input
+    with zero-weight terms, which score as no-ops). The dense engine
+    reads ``dense`` ([B, D] float embeddings) instead.
+    """
+    terms: object = None       # [B, Nq] int32 term ids (or ragged lists)
+    weights_b: object = None   # [B, Nq] f32 BM25-side query weights
+    weights_l: object = None   # [B, Nq] f32 learned-side query weights
+    dense: object = None       # [B, D] f32 query embeddings (dense engine)
+    # None -> resolved by the Retriever (DEFAULT_K, honoring a legacy
+    # TwoLevelParams(k=...) stash) so both invocation styles agree
+    k: int | None = None
+    # Per-call pruning aggressiveness override (Table 3 / Fig. 3 sweeps);
+    # flows into the jitted engines as a traced scalar — no recompile.
+    threshold_factor: float | None = None
+
+    def batch_size(self) -> int:
+        src = self.dense if self.terms is None else self.terms
+        return len(src)
+
+
+@dataclasses.dataclass
+class SearchResponse:
+    """Uniform engine output: ids/scores truncated to the requested k."""
+    ids: np.ndarray            # [B, k] original-space docids (-1 = empty)
+    scores: np.ndarray         # [B, k] f32 RankScore, descending
+    engine: str                # registry name that served the call
+    k: int                     # requested depth
+    k_exec: int                # executed depth (the bucket)
+    stats: dict                # engine counters (per-query arrays/floats)
+    latency_ms: float          # wall-clock of the engine call
+    # per-query host-loop timings (sequential engine only)
+    latencies_ms: np.ndarray | None = None

@@ -1,0 +1,182 @@
+"""Engine protocol + string-keyed registry of retrieval backends.
+
+Every engine adapts one existing traversal entry point to the uniform
+``search(terms, weights_b, weights_l, dense, *, k, params)`` contract and
+returns a ``core.traversal.RetrievalResult``. All sparse engines are
+driven by the same ``core.plan`` planner — registering an engine selects
+an *executor/placement*, never a different pruning algorithm:
+
+    "batched"     vmap x lax.scan tile scan (jnp scorer)      1 device
+    "kernel"      same scan, fused Pallas guided_score scorer 1 device
+    "sequential"  host tile loop, physical skips + timings    1 device
+    "sharded"     shard_map tile ranges + collective merge    mesh
+    "dense"       blocked dense two-level pruning             1 device
+
+Third-party backends register with ``@register_engine("name")`` — the
+class must accept ``(index, params, **opts)`` and implement ``search``.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from ..core.dense_guided import DenseGuidedIndex, retrieve_dense
+from ..core.index import BlockedImpactIndex
+from ..core.traversal import (RetrievalResult, retrieve_batched,
+                              retrieve_sequential)
+from ..core.twolevel import TwoLevelParams
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: register an Engine implementation under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def engine_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_engine(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; registered engines: "
+                       f"{', '.join(engine_names())}") from None
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What the Retriever facade drives. ``search`` executes one batch at
+    depth ``k`` under pruning policy ``params`` and returns the raw
+    engine result (internal ids already mapped to original docid space)."""
+    name: str
+
+    def search(self, terms, weights_b, weights_l, dense, *, k: int,
+               params: TwoLevelParams) -> RetrievalResult:
+        ...
+
+
+def _require_bii(index, engine: str) -> BlockedImpactIndex:
+    if not isinstance(index, BlockedImpactIndex):
+        raise TypeError(f"engine {engine!r} needs a BlockedImpactIndex, "
+                        f"got {type(index).__name__}")
+    return index
+
+
+@register_engine("batched")
+class BatchedEngine:
+    """vmap-over-queries lax.scan tile scan; pure-jnp tile scorer."""
+
+    use_kernel = False
+
+    # NOTE: engines deliberately hold no pruning params — the policy for
+    # each call arrives via search(params=...) (possibly with a per-call
+    # threshold_factor override), so storing the open-time copy would
+    # only invite stale reads.
+    def __init__(self, index, params: TwoLevelParams):
+        self.index = _require_bii(index, self.name)
+
+    def search(self, terms, weights_b, weights_l, dense, *, k, params):
+        return retrieve_batched(self.index, terms, weights_b, weights_l,
+                                params, use_kernel=self.use_kernel, k=k)
+
+
+@register_engine("kernel")
+class KernelEngine(BatchedEngine):
+    """Batched scan routed through the fused Pallas guided_score kernel
+    (interpret mode on CPU, native on TPU)."""
+
+    use_kernel = True
+
+
+@register_engine("sequential")
+class SequentialEngine:
+    """Host-driven per-query loop with physical tile skips; the paper's
+    single-threaded latency regime. Responses carry per-query timings."""
+
+    def __init__(self, index, params: TwoLevelParams, warmup: bool = True):
+        self.index = _require_bii(index, self.name)
+        self.warmup = warmup
+
+    def search(self, terms, weights_b, weights_l, dense, *, k, params):
+        return retrieve_sequential(self.index, terms, weights_b, weights_l,
+                                   params, warmup=self.warmup, k=k)
+
+
+@register_engine("sharded")
+class ShardedEngine:
+    """Mesh-sharded tile ranges with a collective top-k merge.
+
+    Accepts a ``BlockedImpactIndex`` (partitioned here via ``n_shards``)
+    or a prebuilt ``core.shard_plan.ShardedImpactIndex``. ``mesh=None``
+    serves through the single-device vmap emulation path.
+    """
+
+    def __init__(self, index, params: TwoLevelParams, *,
+                 n_shards: int | None = None, mesh=None,
+                 axis_name: str = "shard", use_kernel: bool = False,
+                 exchange_every: int = 0):
+        # deferred: serve.sharded imports serve.engine, which uses the
+        # Retriever facade — a module-level import here would be circular
+        from ..core.shard_plan import ShardedImpactIndex, shard_index
+        if mesh is not None and n_shards is None:
+            n_shards = mesh.shape[axis_name]
+        if isinstance(index, ShardedImpactIndex):
+            self.sharded = index
+        else:
+            self.sharded = shard_index(_require_bii(index, self.name),
+                                       n_shards or 1)
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.use_kernel = use_kernel
+        self.exchange_every = exchange_every
+
+    def search(self, terms, weights_b, weights_l, dense, *, k, params):
+        from ..serve.sharded import shard_retrieve_batched
+        return shard_retrieve_batched(
+            self.sharded, terms, weights_b, weights_l, params,
+            mesh=self.mesh, axis_name=self.axis_name,
+            use_kernel=self.use_kernel,
+            exchange_every=self.exchange_every, k=k)
+
+
+@register_engine("dense")
+class DenseEngine:
+    """2GTI transferred to blocked dense retrieval (two-tower candidates).
+
+    Queries arrive as ``SearchRequest.dense`` [B, D] embeddings; the
+    per-query guided block scan runs host-side. ``threshold_factor``
+    overrides are ignored — the dense skip test has no factor knob."""
+
+    def __init__(self, index, params: TwoLevelParams):
+        if not isinstance(index, DenseGuidedIndex):
+            raise TypeError(f"engine 'dense' needs a DenseGuidedIndex "
+                            f"(core.dense_guided.build_dense_index), got "
+                            f"{type(index).__name__}")
+        self.index = index
+
+    def search(self, terms, weights_b, weights_l, dense, *, k, params):
+        if dense is None:
+            raise ValueError("engine 'dense' reads SearchRequest.dense "
+                             "([B, D] query embeddings); got None")
+        import jax.numpy as jnp
+        ids, scores, scored = [], [], []
+        for q in dense:
+            vals, di, st = retrieve_dense(self.index, jnp.asarray(q),
+                                          params, k=k)
+            ids.append(di)
+            scores.append(vals)
+            scored.append(st["candidates_fully_scored"])
+        stats = {"candidates_fully_scored": np.asarray(scored, np.float32),
+                 "n_candidates": float(self.index.emb.shape[0])}
+        ids = np.stack(ids).astype(np.int32)
+        scores = np.stack(scores).astype(np.float32)
+        return RetrievalResult(ids=ids, scores=scores, global_ids=ids,
+                               local_ids=ids, stats=stats)

@@ -1,7 +1,10 @@
 """Batched retrieval serving engine with latency accounting.
 
-Requests accumulate into batches (max size / max wait); each batch runs the
-2GTI batched engine once. Per-request latency = enqueue -> results, so the
+Requests accumulate into batches (max size / max wait); each batch goes
+through the unified ``repro.retrieval.Retriever`` facade once — the server
+is engine-agnostic: ``engine="batched"`` (default), ``"kernel"``, or
+``"sharded"`` (see ``ShardedRetrievalServer``) all serve through the same
+queue/batch machinery. Per-request latency = enqueue -> results, so the
 MRT/P99 numbers include batching delay — the metric regime of the paper's
 tables, extended to a served setting. A synchronous simulator
 (``run_workload``) drives it with a Poisson arrival process for benchmarks
@@ -15,8 +18,8 @@ import time
 import numpy as np
 
 from ..core.index import BlockedImpactIndex
-from ..core.traversal import retrieve_batched
-from ..core.twolevel import TwoLevelParams
+from ..core.twolevel import TwoLevelParams, resolve_k
+from ..retrieval import Retriever
 
 
 @dataclasses.dataclass
@@ -43,12 +46,17 @@ class Request:
 
 class RetrievalServer:
     def __init__(self, index: BlockedImpactIndex, params: TwoLevelParams,
-                 cfg: ServerConfig | None = None):
+                 cfg: ServerConfig | None = None, *,
+                 engine: str = "batched", k: int | None = None,
+                 **engine_opts):
         self.index = index
         self.params = params
         # None -> fresh per-instance config (a shared default instance would
         # leak max_batch/pad_terms mutations across servers)
         self.cfg = cfg if cfg is not None else ServerConfig()
+        self.retriever = Retriever.open(index, params, engine=engine,
+                                        **engine_opts)
+        self.k = resolve_k(params, k)
         self.pending: list[Request] = []
         self.completed: list[Request] = []
 
@@ -67,11 +75,6 @@ class RetrievalServer:
         keep = np.argsort(-impact, kind="stable")[:self.cfg.pad_terms]
         return np.sort(keep)  # preserve original term order
 
-    def _retrieve(self, terms, qw_b, qw_l):
-        """Batch executor hook — subclasses swap the retrieval engine
-        (ShardedRetrievalServer routes through the mesh-sharded path)."""
-        return retrieve_batched(self.index, terms, qw_b, qw_l, self.params)
-
     def _flush(self) -> None:
         batch, self.pending = (self.pending[:self.cfg.max_batch],
                                self.pending[self.cfg.max_batch:])
@@ -85,7 +88,8 @@ class RetrievalServer:
             terms[i, :k] = np.asarray(r.terms)[keep]
             qw_b[i, :k] = np.asarray(r.qw_b)[keep]
             qw_l[i, :k] = np.asarray(r.qw_l)[keep]
-        res = self._retrieve(terms, qw_b, qw_l)
+        res = self.retriever.search(terms=terms, weights_b=qw_b,
+                                    weights_l=qw_l, k=self.k)
         done = time.perf_counter()
         for i, r in enumerate(batch):
             r.ids, r.scores, r.t_done = res.ids[i], res.scores[i], done

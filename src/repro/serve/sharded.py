@@ -42,10 +42,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.plan import plan_query, tile_schedule
-from ..core.shard_plan import ShardedImpactIndex, shard_index
+from ..core.shard_plan import ShardedImpactIndex
 from ..core.traversal import (STAT_KEYS, RetrievalResult, _init_carry,
                               _tile_step)
-from ..core.twolevel import TwoLevelParams
+from ..core.twolevel import TwoLevelParams, resolve_k
 from ..dist.collectives import ring_gather_stack
 from .engine import RetrievalServer, ServerConfig
 
@@ -78,11 +78,25 @@ def _global_theta(gv, k: int):
     return jax.lax.top_k(v, k)[0][:, -1]
 
 
-def _chunks(n_tiles: int, exchange_every: int):
-    if exchange_every <= 0 or exchange_every >= n_tiles:
-        return ((0, n_tiles),)
-    return tuple((c0, min(c0 + exchange_every, n_tiles))
-                 for c0 in range(0, n_tiles, exchange_every))
+def _fold_schedule(tiles, tiles_per_shard: int, exchange_every: int):
+    """Reshape a tile order [..., T] into exchange rounds [..., C, E].
+
+    E is the exchange period (the whole schedule when exchange is off).
+    The tail round is padded with the sentinel tile ``tiles_per_shard``:
+    it is >= every shard's ``n_real``, so ``_tile_step`` force-skips it
+    (``tile_valid`` False) and it touches no queue, stat, or gather —
+    every round gets the same static length and the round loop can be a
+    single ``lax.scan`` instead of unrolled segments.
+    """
+    t = tiles.shape[-1]
+    period = exchange_every if 0 < exchange_every < t else t
+    n_rounds = -(-t // period)
+    pad = n_rounds * period - t
+    if pad:
+        tiles = jnp.concatenate(
+            [tiles, jnp.full(tiles.shape[:-1] + (pad,), tiles_per_shard,
+                             jnp.int32)], axis=-1)
+    return tiles.reshape(tiles.shape[:-1] + (n_rounds, period))
 
 
 def _plan_shard(tm_b, tm_l, sigma_b, sigma_l, q_terms, qw_b, qw_l, alpha,
@@ -140,16 +154,29 @@ def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
         lambda mb, ml: planner(mb, ml, sigma_b, sigma_l,
                                q_terms, qw_b, qw_l, alpha))(tm_b, tm_l)
     carries = _broadcast_carry(k, n_shards, b)
-    th_floor = jnp.full((b,), -jnp.inf, jnp.float32)
+    no_floor = jnp.full((b,), -jnp.inf, jnp.float32)
     scan = partial(_scan_chunk, statics=statics)
-    for c0, c1 in _chunks(tiles_per_shard, exchange_every):
-        carries = jax.vmap(scan, in_axes=(0, 0, 0, 0, 0, None,
-                                          None, None, None, None))(
+
+    def run_round(carries, tiles_round, floor):
+        return jax.vmap(scan, in_axes=(0, 0, 0, 0, 0, None,
+                                       None, None, None, None))(
             (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
-            n_real, plans, tiles[:, :, c0:c1], carries, th_floor,
+            n_real, plans, tiles_round, carries, floor,
             alpha, beta, gamma, factor)
-        if exchange_every > 0 and c1 < tiles_per_shard:
-            th_floor = _global_theta(carries[0], k)
+
+    # [n_shards, B, C, E] -> rounds-first [C, n_shards, B, E]
+    rounds = jnp.moveaxis(
+        _fold_schedule(tiles, tiles_per_shard, exchange_every), 2, 0)
+    # round 0 has no exchanged floor; every later round derives the exact
+    # global theta from the carries at round *start* — the between-rounds
+    # exchange of the old unrolled loop, now inside one lax.scan (two
+    # compiled segments total, independent of the round count)
+    carries = run_round(carries, rounds[0], no_floor)
+    if rounds.shape[0] > 1:
+        def round_step(carries, tiles_round):
+            floor = _global_theta(carries[0], k)
+            return run_round(carries, tiles_round, floor), None
+        carries, _ = jax.lax.scan(round_step, carries, rounds[1:])
     gv, gi, lv, li, rv, ri, st = carries
     gi, li, ri = (jax.vmap(_rebase)(i, doc_base) for i in (gi, li, ri))
     gv, gi = _merge_stacked(gv, gi, k)
@@ -185,13 +212,22 @@ def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
                                    schedule=schedule)
         carries = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (b,) + x.shape), _init_carry(k))
-        th_floor = jnp.full((b,), -jnp.inf, jnp.float32)
-        for c0, c1 in _chunks(tiles_per_shard, exchange_every):
-            carries = scan(idx_arrays, n_real[0], plans, tiles[:, c0:c1],
-                           carries, th_floor, alpha, beta, gamma, factor)
-            if exchange_every > 0 and c1 < tiles_per_shard:
+        no_floor = jnp.full((b,), -jnp.inf, jnp.float32)
+        # [B, C, E] -> rounds-first [C, B, E]; round 0 runs floor-less,
+        # later rounds all-gather the exact global theta at round start
+        # (same collective count as the old unrolled between-rounds loop)
+        rounds = jnp.moveaxis(
+            _fold_schedule(tiles, tiles_per_shard, exchange_every), 1, 0)
+        carries = scan(idx_arrays, n_real[0], plans, rounds[0],
+                       carries, no_floor, alpha, beta, gamma, factor)
+        if rounds.shape[0] > 1:
+            def round_step(carries, tiles_round):
                 gv_all = ring_gather_stack(carries[0], axis_name, n_shards)
-                th_floor = _global_theta(gv_all, k)
+                floor = _global_theta(gv_all, k)
+                carries = scan(idx_arrays, n_real[0], plans, tiles_round,
+                               carries, floor, alpha, beta, gamma, factor)
+                return carries, None
+            carries, _ = jax.lax.scan(round_step, carries, rounds[1:])
         gv, gi, lv, li, rv, ri, st = carries
         gi, li, ri = (_rebase(i, doc_base[0]) for i in (gi, li, ri))
         merged = []
@@ -223,33 +259,29 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
                            params: TwoLevelParams, mesh=None,
                            axis_name: str = "shard",
                            use_kernel: bool = False,
-                           exchange_every: int = 0) -> RetrievalResult:
+                           exchange_every: int = 0,
+                           k: int | None = None) -> RetrievalResult:
     """Sharded batched retrieval over a stacked shard index.
 
     ``mesh=None`` runs the vmap emulation path (any shard count on one
     device, bit-identical to the mesh path); a one-axis mesh whose
     ``axis_name`` size equals ``sharded.n_shards`` runs the collective
     ``shard_map`` path. ``exchange_every=E`` all-gathers the exact global
-    theta_Gl every E tiles so shards skip against the global queue. Each
-    exchange round is an unrolled scan segment in the compiled program, so
-    the period must stay coarse (the chunk count is capped at 64).
+    theta_Gl every E tiles so shards skip against the global queue; the
+    round loop is one ``lax.scan`` over sentinel-padded rounds, so fine
+    periods compile at production tile counts. ``k`` is the per-call
+    retrieval depth (legacy ``params.k`` fallback).
     """
     if mesh is not None and mesh.shape[axis_name] != sharded.n_shards:
         raise ValueError(
             f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} but "
             f"the index has {sharded.n_shards} shards")
-    n_chunks = len(_chunks(sharded.tiles_per_shard, exchange_every))
-    if n_chunks > 64:
-        raise ValueError(
-            f"exchange_every={exchange_every} yields {n_chunks} unrolled "
-            f"scan segments for {sharded.tiles_per_shard} tiles/shard; use "
-            f"a period >= {-(-sharded.tiles_per_shard // 64)} to bound "
-            f"compile size")
     q_terms = jnp.asarray(q_terms, dtype=jnp.int32)
     qw_b = jnp.asarray(qw_b, dtype=jnp.float32)
     qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
-    kq = min(params.k, sharded.tile_size)
-    kw = dict(k=params.k, kq=kq, pad_len=sharded.pad_len,
+    k = resolve_k(params, k)
+    kq = min(k, sharded.tile_size)
+    kw = dict(k=k, kq=kq, pad_len=sharded.pad_len,
               tile_size=sharded.tile_size, bound_mode=params.bound_mode,
               use_kernel=use_kernel, schedule=params.schedule,
               tiles_per_shard=sharded.tiles_per_shard,
@@ -281,24 +313,17 @@ class ShardedRetrievalServer(RetrievalServer):
     """RetrievalServer whose batch executor is the mesh-sharded engine.
 
     Accepts the same queue/batching config; the index is partitioned once
-    at construction. ``mesh=None`` serves through the emulation path."""
+    at construction (inside the ``"sharded"`` registry engine).
+    ``mesh=None`` serves through the emulation path."""
 
     def __init__(self, index, params: TwoLevelParams,
                  cfg: ServerConfig | None = None, *,
                  n_shards: int | None = None, mesh=None,
                  axis_name: str = "shard", use_kernel: bool = False,
-                 exchange_every: int = 0):
-        super().__init__(index, params, cfg)
-        if mesh is not None and n_shards is None:
-            n_shards = mesh.shape[axis_name]
-        self.sharded = shard_index(index, n_shards or 1)
+                 exchange_every: int = 0, k: int | None = None):
+        super().__init__(index, params, cfg, engine="sharded", k=k,
+                         n_shards=n_shards, mesh=mesh, axis_name=axis_name,
+                         use_kernel=use_kernel,
+                         exchange_every=exchange_every)
+        self.sharded = self.retriever.engine.sharded
         self.mesh = mesh
-        self.axis_name = axis_name
-        self.use_kernel = use_kernel
-        self.exchange_every = exchange_every
-
-    def _retrieve(self, terms, qw_b, qw_l) -> RetrievalResult:
-        return shard_retrieve_batched(
-            self.sharded, terms, qw_b, qw_l, self.params, mesh=self.mesh,
-            axis_name=self.axis_name, use_kernel=self.use_kernel,
-            exchange_every=self.exchange_every)

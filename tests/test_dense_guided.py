@@ -27,7 +27,7 @@ def _query(seed):
 
 
 def test_rank_safe_equals_exhaustive(dense_index):
-    p = TwoLevelParams(alpha=0.0, beta=0.0, gamma=0.0, k=10)
+    p = TwoLevelParams(alpha=0.0, beta=0.0, gamma=0.0)
     for seed in range(3):
         q = _query(seed)
         vals, ids, _ = retrieve_dense(dense_index, q, p)
@@ -44,7 +44,7 @@ def test_pca_rotation_preserves_scores(dense_index):
 
 
 def test_guided_small_beta_keeps_recall(dense_index):
-    p = TwoLevelParams(alpha=1.0, beta=0.2, gamma=0.0, k=10)
+    p = TwoLevelParams(alpha=1.0, beta=0.2, gamma=0.0)
     rec = 0.0
     for seed in range(4):
         q = _query(seed)
@@ -55,6 +55,6 @@ def test_guided_small_beta_keeps_recall(dense_index):
 
 
 def test_guided_beta_one_prunes_hard(dense_index):
-    p = TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.0, k=10)
+    p = TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.0)
     _, _, st = retrieve_dense(dense_index, _query(0), p)
     assert st["candidates_fully_scored"] < st["n_candidates"] * 0.5

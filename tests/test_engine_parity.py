@@ -30,7 +30,7 @@ def setup(small_corpus):
 @pytest.mark.parametrize("gamma", [0.0, 0.05, 0.3, 1.0])
 def test_rank_safe_engine_matches_oracle_qrk(setup, use_kernel, gamma):
     corpus, merged, index = setup
-    p = twolevel.original(k=K, gamma=gamma)
+    p = twolevel.original(gamma=gamma)
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                            corpus.q_weights_l, p, use_kernel=use_kernel)
     for qi in range(len(corpus.queries)):
@@ -63,7 +63,7 @@ def test_guided_engine_scores_match_oracle_qrk(setup, use_kernel, preset):
     scores must stay within 2% (either traversal may keep the slightly
     better boundary doc)."""
     corpus, merged, index = setup
-    p = getattr(twolevel, preset)(k=K)
+    p = getattr(twolevel, preset)()
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                            corpus.q_weights_l, p, use_kernel=use_kernel)
     for qi in range(len(corpus.queries)):
@@ -81,8 +81,8 @@ def test_guided_engine_scores_match_oracle_qrk(setup, use_kernel, preset):
 def test_kernel_and_jnp_paths_identical_across_presets(setup):
     """Both execution paths of retrieve_batched are the same algorithm."""
     corpus, merged, index = setup
-    for p in (twolevel.fast(k=K), twolevel.original(k=K, gamma=0.2),
-              twolevel.fast(k=K).replace(bound_mode="tile")):
+    for p in (twolevel.fast(), twolevel.original(gamma=0.2),
+              twolevel.fast().replace(bound_mode="tile")):
         r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                               corpus.q_weights_l, p)
         r1 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,

@@ -45,9 +45,9 @@ def test_prop1_triple_topk_membership(seed, alpha, beta, gamma):
     corpus = _corpus(seed)
     merged = corpus.merged("scaled")
     index = build_index(merged, tile_size=128, pad_multiple=128)
-    p = twolevel.TwoLevelParams(alpha=alpha, beta=beta, gamma=gamma, k=K)
+    p = twolevel.TwoLevelParams(alpha=alpha, beta=beta, gamma=gamma)
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
-                           corpus.q_weights_l, p)
+                           corpus.q_weights_l, p, k=K)
     for qi in range(len(corpus.queries)):
         qt, qwb, qwl = (corpus.queries[qi], corpus.q_weights_b[qi],
                         corpus.q_weights_l[qi])
@@ -59,7 +59,7 @@ def test_prop1_triple_topk_membership(seed, alpha, beta, gamma):
         got_engine = set(int(d) for d in res.ids[qi])
         assert must_have <= got_engine, (
             f"engine violated Prop 1: missing {must_have - got_engine}")
-        ids_o, _, _ = daat_2gti(merged, qt, qwb, qwl, p)
+        ids_o, _, _ = daat_2gti(merged, qt, qwb, qwl, p, k=K)
         got_oracle = set(int(d) for d in ids_o)
         assert must_have <= got_oracle, (
             f"oracle violated Prop 1: missing {must_have - got_oracle}")
@@ -74,11 +74,11 @@ def test_prop2_beats_two_stage(seed, alpha, gamma, tie):
     corpus = _corpus(seed)
     merged = corpus.merged("scaled")
     beta = alpha if tie == "alpha" else gamma
-    p = twolevel.TwoLevelParams(alpha=alpha, beta=beta, gamma=gamma, k=K)
+    p = twolevel.TwoLevelParams(alpha=alpha, beta=beta, gamma=gamma)
     for qi in range(2):
         qt, qwb, qwl = (corpus.queries[qi], corpus.q_weights_b[qi],
                         corpus.q_weights_l[qi])
-        ids_o, _, _ = daat_2gti(merged, qt, qwb, qwl, p)
+        ids_o, _, _ = daat_2gti(merged, qt, qwb, qwl, p, k=K)
         s = score_all_merged(merged, qt, qwb, qwl, gamma)
         ids_o = ids_o[ids_o >= 0]
         ids_2s, _ = two_stage(merged, qt, qwb, qwl, alpha, gamma, K)
@@ -96,9 +96,9 @@ def test_safe_config_equals_exhaustive(seed, gamma):
     corpus = _corpus(seed)
     merged = corpus.merged("zero")
     index = build_index(merged, tile_size=128, pad_multiple=128)
-    p = twolevel.original(k=K, gamma=gamma)
+    p = twolevel.original(gamma=gamma)
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
-                           corpus.q_weights_l, p)
+                           corpus.q_weights_l, p, k=K)
     for qi in range(len(corpus.queries)):
         _, vals = ranked_list(merged, corpus.queries[qi],
                               corpus.q_weights_b[qi],
@@ -128,7 +128,7 @@ def test_result_sorted_and_unique(seed):
     merged = corpus.merged("scaled")
     index = build_index(merged, tile_size=128, pad_multiple=128)
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
-                           corpus.q_weights_l, twolevel.fast(k=K))
+                           corpus.q_weights_l, twolevel.fast(), k=K)
     for qi in range(len(corpus.queries)):
         sc = res.scores[qi]
         finite = sc[np.isfinite(sc)]

@@ -1,0 +1,312 @@
+"""Unified search API: registry coverage, facade-vs-legacy bit parity for
+every registered engine, the k-bucketing path, the no-recompile-within-a-
+bucket guarantee, and the TwoLevelParams.k deprecation shim.
+
+The parity tests are the API contract: ``Retriever.search`` is a facade,
+not a fork — for every engine it must return exactly what the legacy
+entry point returns (ids and scores bit-identical), on rank-safe *and*
+guided configs when k sits on a bucket, and on rank-safe configs even
+when k is bucketed up and truncated back (exact top-k is prefix-closed
+under the stable tie discipline).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import build_index, twolevel
+from repro.core.shard_plan import shard_index
+from repro.core.traversal import retrieve_batched, retrieve_sequential
+from repro.retrieval import (K_BUCKETS, Retriever, SearchRequest,
+                             bucket_k, engine_names, get_engine)
+from repro.serve.sharded import shard_retrieve_batched
+
+ALL_ENGINES = ("batched", "dense", "kernel", "sequential", "sharded")
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    index = build_index(small_corpus.merged("scaled"), tile_size=256)
+    return small_corpus, index
+
+
+def _q(corpus):
+    return dict(terms=corpus.queries, weights_b=corpus.q_weights_b,
+                weights_l=corpus.q_weights_l)
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_has_all_engines():
+    assert engine_names() == tuple(sorted(ALL_ENGINES))
+
+
+def test_unknown_engine_lists_alternatives():
+    with pytest.raises(KeyError, match="batched"):
+        get_engine("bm25")
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_every_engine_serves_a_request(setup, engine):
+    """Registry smoke: each name opens and answers a small request with
+    the uniform response shape (the make test-api / fast-lane gate)."""
+    corpus, index = setup
+    if engine == "dense":
+        import jax.numpy as jnp
+        from repro.core.dense_guided import build_dense_index
+        rng = np.random.default_rng(0)
+        emb = rng.standard_normal((1024, 16)).astype(np.float32)
+        r = Retriever.open(build_dense_index(jnp.asarray(emb),
+                                             block_size=256, d_cheap=4),
+                           twolevel.original(gamma=0.0), engine="dense")
+        resp = r.search(dense=rng.standard_normal((3, 16)).astype(
+            np.float32), k=5)
+    else:
+        r = Retriever.open(index, twolevel.fast(), engine=engine)
+        resp = r.search(**_q(corpus), k=5)
+    assert resp.engine == engine
+    assert resp.k == 5 and resp.k_exec == 10
+    assert resp.ids.shape == resp.scores.shape == (resp.ids.shape[0], 5)
+    assert resp.latency_ms > 0
+    assert resp.stats
+
+
+# -- facade vs legacy entry points, bit-identical -----------------------------
+
+@pytest.mark.parametrize("params", [twolevel.original(gamma=0.2),
+                                    twolevel.fast()],
+                         ids=["rank_safe", "guided"])
+def test_batched_and_kernel_match_legacy(setup, params):
+    corpus, index = setup
+    for engine, use_kernel in (("batched", False), ("kernel", True)):
+        ref = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                               corpus.q_weights_l, params,
+                               use_kernel=use_kernel, k=10)
+        resp = Retriever.open(index, params, engine=engine).search(
+            **_q(corpus), k=10)
+        np.testing.assert_array_equal(resp.ids, ref.ids)
+        np.testing.assert_array_equal(resp.scores, ref.scores)
+
+
+@pytest.mark.parametrize("params", [twolevel.original(gamma=0.2),
+                                    twolevel.fast()],
+                         ids=["rank_safe", "guided"])
+def test_sequential_matches_legacy(setup, params):
+    corpus, index = setup
+    ref = retrieve_sequential(index, corpus.queries, corpus.q_weights_b,
+                              corpus.q_weights_l, params, k=10)
+    resp = Retriever.open(index, params, engine="sequential").search(
+        **_q(corpus), k=10)
+    np.testing.assert_array_equal(resp.ids, ref.ids)
+    np.testing.assert_array_equal(resp.scores, ref.scores)
+    assert resp.latencies_ms is not None and len(resp.latencies_ms) == len(
+        corpus.queries)
+
+
+@pytest.mark.parametrize("params", [twolevel.original(gamma=0.2),
+                                    twolevel.fast()],
+                         ids=["rank_safe", "guided"])
+def test_sharded_matches_legacy(setup, params):
+    corpus, index = setup
+    sh = shard_index(index, 3)
+    ref = shard_retrieve_batched(sh, corpus.queries, corpus.q_weights_b,
+                                 corpus.q_weights_l, params, k=10)
+    resp = Retriever.open(index, params, engine="sharded",
+                          n_shards=3).search(**_q(corpus), k=10)
+    np.testing.assert_array_equal(resp.ids, ref.ids)
+    np.testing.assert_array_equal(resp.scores, ref.scores)
+
+
+def test_sharded_accepts_prebuilt_shard_plan(setup):
+    corpus, index = setup
+    p = twolevel.fast()
+    sh = shard_index(index, 4)
+    a = Retriever.open(index, p, engine="sharded", n_shards=4).search(
+        **_q(corpus), k=10)
+    b = Retriever.open(sh, p, engine="sharded").search(**_q(corpus), k=10)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_dense_matches_legacy():
+    import jax.numpy as jnp
+    from repro.core.dense_guided import build_dense_index, retrieve_dense
+    rng = np.random.default_rng(1)
+    emb = rng.standard_normal((2048, 24)).astype(np.float32)
+    index = build_dense_index(jnp.asarray(emb), block_size=256, d_cheap=8)
+    qs = rng.standard_normal((4, 24)).astype(np.float32)
+    for params in (twolevel.TwoLevelParams(0.0, 0.0, 0.0),   # rank-safe
+                   twolevel.TwoLevelParams(1.0, 0.3, 0.0)):  # guided
+        resp = Retriever.open(index, params, engine="dense").search(
+            dense=qs, k=10)
+        for i, q in enumerate(qs):
+            vals, ids, _ = retrieve_dense(index, jnp.asarray(q), params,
+                                          k=10)
+            np.testing.assert_array_equal(resp.ids[i], ids)
+            np.testing.assert_array_equal(resp.scores[i], vals)
+
+
+# -- per-call knobs -----------------------------------------------------------
+
+def test_threshold_factor_override_matches_replaced_params(setup):
+    corpus, index = setup
+    base = twolevel.original(gamma=0.2)
+    ref = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l,
+                           base.replace(threshold_factor=1.5), k=10)
+    resp = Retriever.open(index, base).search(**_q(corpus), k=10,
+                                              threshold_factor=1.5)
+    np.testing.assert_array_equal(resp.ids, ref.ids)
+    np.testing.assert_array_equal(resp.scores, ref.scores)
+
+
+def test_search_request_object_and_kwargs_agree(setup):
+    corpus, index = setup
+    r = Retriever.open(index, twolevel.fast())
+    a = r.search(SearchRequest(**_q(corpus), k=7))
+    b = r.search(**_q(corpus), k=7)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    with pytest.raises(TypeError, match="not both"):
+        r.search(SearchRequest(**_q(corpus)), k=7)
+    with pytest.raises(TypeError, match="not both"):
+        r.search(SearchRequest(**_q(corpus)),
+                 weights_b=corpus.q_weights_b)
+
+
+def test_ragged_queries_are_padded(setup):
+    """Ragged per-query lists serve identically to zero-padded arrays."""
+    corpus, index = setup
+    r = Retriever.open(index, twolevel.fast())
+    ref = r.search(**_q(corpus), k=10)
+    ragged = dict(
+        terms=[q for q in corpus.queries],
+        weights_b=[w for w in corpus.q_weights_b],
+        weights_l=[w for w in corpus.q_weights_l])
+    # chop one query short (its weights tail was nonzero -> scores may
+    # legitimately change), so instead extend with explicit zero weights
+    ragged["terms"][0] = np.concatenate([corpus.queries[0], [0, 0]])
+    ragged["weights_b"][0] = np.concatenate([corpus.q_weights_b[0],
+                                             [0.0, 0.0]])
+    ragged["weights_l"][0] = np.concatenate([corpus.q_weights_l[0],
+                                             [0.0, 0.0]])
+    resp = r.search(**ragged, k=10)
+    np.testing.assert_array_equal(resp.ids, ref.ids)
+    np.testing.assert_array_equal(resp.scores, ref.scores)
+
+
+# -- k-bucketing --------------------------------------------------------------
+
+def test_bucket_k_boundaries():
+    assert [bucket_k(k) for k in (1, 10, 11, 100, 101, 1000, 5000)] == \
+        [10, 10, 100, 100, 1000, 1000, 5000]
+    assert bucket_k(7, None) == 7
+    with pytest.raises(ValueError):
+        bucket_k(0)
+
+
+@pytest.mark.parametrize("k", [5, 10, 100])
+def test_bucketed_k_rank_safe_parity_all_sparse_engines(setup, k):
+    """The acceptance sweep: k in {5, 10, 100} through the bucketing path
+    must be bit-identical to the legacy entry point run at exactly k, for
+    every sparse engine, on a rank-safe config (k=5 executes at the k=10
+    bucket and is truncated — exact top-k is prefix-closed)."""
+    corpus, index = setup
+    params = twolevel.original(gamma=0.2)
+    legacy = {
+        "batched": lambda: retrieve_batched(
+            index, corpus.queries, corpus.q_weights_b, corpus.q_weights_l,
+            params, k=k),
+        "kernel": lambda: retrieve_batched(
+            index, corpus.queries, corpus.q_weights_b, corpus.q_weights_l,
+            params, use_kernel=True, k=k),
+        "sequential": lambda: retrieve_sequential(
+            index, corpus.queries, corpus.q_weights_b, corpus.q_weights_l,
+            params, k=k),
+        "sharded": lambda: shard_retrieve_batched(
+            shard_index(index, 2), corpus.queries, corpus.q_weights_b,
+            corpus.q_weights_l, params, k=k),
+    }
+    for engine, call in legacy.items():
+        ref = call()
+        opts = {"n_shards": 2} if engine == "sharded" else {}
+        resp = Retriever.open(index, params, engine=engine, **opts).search(
+            **_q(corpus), k=k)
+        assert resp.k_exec == bucket_k(k)
+        np.testing.assert_array_equal(resp.ids, ref.ids[:, :k],
+                                      err_msg=engine)
+        np.testing.assert_array_equal(resp.scores, ref.scores[:, :k],
+                                      err_msg=engine)
+
+
+def test_k_within_bucket_does_not_recompile(setup):
+    """Changing k at call time must not recompile within a bucket: the
+    jitted batched impl's cache may not grow between k=5 and k=8 (both
+    execute at the 10-bucket); a new bucket adds exactly one entry."""
+    from repro.core.traversal import _retrieve_batched_impl
+    corpus, _ = setup
+    # fresh tile_size -> unique static shapes -> cold jit-cache rows for
+    # this test regardless of what other tests already compiled
+    index = build_index(corpus.merged("scaled"), tile_size=64)
+    r = Retriever.open(index, twolevel.fast())
+    r.search(**_q(corpus), k=5)        # compiles the 10-bucket
+    n0 = _retrieve_batched_impl._cache_size()
+    r.search(**_q(corpus), k=8)        # same bucket: cache hit
+    r.search(**_q(corpus), k=10)
+    assert _retrieve_batched_impl._cache_size() == n0
+    r.search(**_q(corpus), k=42)       # 100-bucket: one new entry
+    assert _retrieve_batched_impl._cache_size() == n0 + 1
+    r.search(**_q(corpus), k=100)      # still the 100-bucket
+    assert _retrieve_batched_impl._cache_size() == n0 + 1
+
+
+def test_exact_mode_disables_bucketing(setup):
+    corpus, index = setup
+    r = Retriever.open(index, twolevel.fast(), k_buckets=None)
+    resp = r.search(**_q(corpus), k=7)
+    assert resp.k == resp.k_exec == 7
+
+
+def test_custom_buckets_are_sorted(setup):
+    corpus, index = setup
+    r = Retriever.open(index, twolevel.fast(), k_buckets=(100, 10))
+    assert r.search(**_q(corpus), k=5).k_exec == 10
+
+
+# -- TwoLevelParams.k deprecation shim ----------------------------------------
+
+def test_legacy_k_warns_and_still_works(setup):
+    corpus, index = setup
+    with pytest.warns(DeprecationWarning, match="query-time"):
+        p_old = twolevel.fast(k=5)
+    assert p_old.k == 5
+    # the stash survives replace() and keeps driving legacy call sites
+    assert p_old.replace(schedule="impact").k == 5
+    ref = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, twolevel.fast(), k=5)
+    res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                           corpus.q_weights_l, p_old)
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.scores, ref.scores)
+    # policy equality ignores the deprecated stash; resolve_k honors it
+    assert p_old == twolevel.fast()
+    assert twolevel.resolve_k(p_old) == 5
+    assert twolevel.resolve_k(p_old, 12) == 12
+    assert twolevel.resolve_k(twolevel.fast()) == twolevel.DEFAULT_K
+
+
+def test_legacy_k_positional_slot_preserved():
+    with pytest.warns(DeprecationWarning):
+        p = twolevel.TwoLevelParams(1.0, 0.3, 0.05, 7)
+    assert p.k == 7 and p.threshold_factor == 1.0
+
+
+def test_retriever_honors_legacy_k_default(setup):
+    corpus, index = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        p_old = twolevel.fast(k=5)
+    r = Retriever.open(index, p_old)
+    resp = r.search(**_q(corpus))
+    assert resp.k == 5
+    # both invocation styles resolve the depth identically
+    assert r.search(SearchRequest(**_q(corpus))).k == 5

@@ -22,7 +22,7 @@ def test_overlong_query_truncates_to_lowest_impact_terms(served):
     """A request with more terms than pad_terms keeps the highest
     gamma-combined-weight terms, and still returns a full result."""
     corpus, index = served
-    params = twolevel.fast(k=10)
+    params = twolevel.fast()
     pad = 4
     srv = RetrievalServer(index, params, ServerConfig(max_batch=2,
                                                       max_wait_ms=0.1,
@@ -50,7 +50,7 @@ def test_truncation_prefers_high_weight_over_leading_terms(served):
     """The kept set is weight-ranked, not positional: put the heavy terms
     last and check they survive."""
     corpus, index = served
-    params = twolevel.fast(k=10)
+    params = twolevel.fast()
     pad = 2
     nq = len(corpus.queries[0])
     terms = corpus.queries[0].copy()
@@ -67,7 +67,7 @@ def test_partial_final_batch_flushes_on_drain(served):
     """Fewer pending requests than max_batch must still complete once the
     arrival stream ends (no stranded tail)."""
     corpus, index = served
-    srv = RetrievalServer(index, twolevel.fast(k=10),
+    srv = RetrievalServer(index, twolevel.fast(),
                           ServerConfig(max_batch=8, max_wait_ms=50.0))
     reqs = [_request(corpus, i % len(corpus.queries)) for i in range(3)]
     stats = srv.run_workload(reqs, qps=2000.0)
@@ -81,7 +81,7 @@ def test_multiple_partial_batches_drain_in_order(served):
     """max_batch=1 forces one flush per request; results keep arrival
     order and every latency is positive."""
     corpus, index = served
-    srv = RetrievalServer(index, twolevel.fast(k=10),
+    srv = RetrievalServer(index, twolevel.fast(),
                           ServerConfig(max_batch=1, max_wait_ms=0.0))
     reqs = [_request(corpus, i) for i in range(5)]
     stats = srv.run_workload(reqs, qps=1000.0)
@@ -94,7 +94,7 @@ def test_multiple_partial_batches_drain_in_order(served):
 def test_empty_workload_returns_zero_stats(served):
     """run_workload([]) must not reduce over empty latency arrays."""
     corpus, index = served
-    srv = RetrievalServer(index, twolevel.fast(k=10))
+    srv = RetrievalServer(index, twolevel.fast())
     stats = srv.run_workload([], qps=100.0)
     assert stats["n"] == 0
     assert stats["qps_achieved"] == 0.0
@@ -105,8 +105,8 @@ def test_default_config_not_shared_across_servers(served):
     """The default ServerConfig must be per-instance: mutating one
     server's config cannot leak into another's."""
     corpus, index = served
-    a = RetrievalServer(index, twolevel.fast(k=10))
-    b = RetrievalServer(index, twolevel.fast(k=10))
+    a = RetrievalServer(index, twolevel.fast())
+    b = RetrievalServer(index, twolevel.fast())
     assert a.cfg is not b.cfg
     a.cfg.max_batch = 1
     assert b.cfg.max_batch == ServerConfig().max_batch
@@ -115,7 +115,7 @@ def test_default_config_not_shared_across_servers(served):
 def test_empty_padded_request_is_harmless(served):
     """All-zero weights (fully padded request) completes without NaNs."""
     corpus, index = served
-    srv = RetrievalServer(index, twolevel.fast(k=10), ServerConfig())
+    srv = RetrievalServer(index, twolevel.fast(), ServerConfig())
     req = Request(np.zeros(4, np.int32), np.zeros(4, np.float32),
                   np.zeros(4, np.float32))
     srv.submit(req, 0.0)

@@ -85,7 +85,7 @@ def test_shard_plan_padded_tiles_are_empty(setup):
 def test_single_shard_exact_parity_guided(setup, schedule, use_kernel):
     """n_shards=1 is the same traversal: any config matches bit-exactly."""
     corpus, index = setup
-    p = twolevel.fast(k=K).replace(schedule=schedule)
+    p = twolevel.fast().replace(schedule=schedule)
     ref = retrieve_batched(index, *_q(corpus), p, use_kernel=use_kernel)
     res = shard_retrieve_batched(shard_index(index, 1), *_q(corpus), p,
                                  use_kernel=use_kernel)
@@ -102,7 +102,7 @@ def test_multi_shard_rank_safe_exact_parity(setup, n_shards, schedule,
     """Rank-safe configs: pruning is bound-exact, so tile-range sharding
     (a traversal-order change) must return bit-identical top-k."""
     corpus, index = setup
-    p = twolevel.original(k=K, gamma=0.2).replace(schedule=schedule)
+    p = twolevel.original(gamma=0.2).replace(schedule=schedule)
     ref = retrieve_batched(index, *_q(corpus), p, use_kernel=use_kernel)
     res = shard_retrieve_batched(shard_index(index, n_shards), *_q(corpus),
                                  p, use_kernel=use_kernel)
@@ -116,7 +116,7 @@ def test_multi_shard_guided_parity(setup, schedule):
     local thresholds are only *looser* (never unsafe). On this corpus the
     kept sets coincide, pinning the merge end-to-end for unsafe configs."""
     corpus, index = setup
-    p = twolevel.fast(k=K).replace(schedule=schedule)
+    p = twolevel.fast().replace(schedule=schedule)
     ref = retrieve_batched(index, *_q(corpus), p)
     res = shard_retrieve_batched(shard_index(index, 4), *_q(corpus), p)
     np.testing.assert_array_equal(res.ids, ref.ids)
@@ -130,7 +130,7 @@ def test_multi_shard_guided_scores_dominate(setup):
     elementwise. threshold_factor=1.5 forces aggressive pruning so the
     trajectories actually diverge."""
     corpus, index = setup
-    p = twolevel.fast(k=K).replace(threshold_factor=1.5)
+    p = twolevel.fast().replace(threshold_factor=1.5)
     ref = retrieve_batched(index, *_q(corpus), p)
     res = shard_retrieve_batched(shard_index(index, 4), *_q(corpus), p)
     assert np.all(res.scores >= ref.scores - 1e-5)
@@ -140,7 +140,7 @@ def test_threshold_exchange_rank_safe_exact(setup):
     """The exchanged floor is the exact global theta — a safe bound — so
     rank-safe results stay bit-identical at any exchange period."""
     corpus, index = setup
-    p = twolevel.original(k=K, gamma=0.2)
+    p = twolevel.original(gamma=0.2)
     ref = retrieve_batched(index, *_q(corpus), p)
     sh = shard_index(index, 4)
     for every in (1, 2):
@@ -150,10 +150,40 @@ def test_threshold_exchange_rank_safe_exact(setup):
         np.testing.assert_array_equal(res.scores, ref.scores)
 
 
+def test_fine_exchange_beyond_former_round_cap(small_corpus):
+    """exchange_every=1 at 256 tiles (128 rounds/shard) — double the old
+    64-segment unroll cap — compiles as one lax.scan over sentinel-padded
+    rounds and stays bit-identical for rank-safe configs."""
+    corpus = small_corpus
+    index = build_index(corpus.merged("scaled"), tile_size=8)  # 256 tiles
+    p = twolevel.original(gamma=0.2)
+    ref = retrieve_batched(index, *_q(corpus), p)
+    res = shard_retrieve_batched(shard_index(index, 2), *_q(corpus), p,
+                                 exchange_every=1)
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.scores, ref.scores)
+
+
+def test_exchange_round_sentinel_padding_parity(setup):
+    """Periods that don't divide tiles_per_shard exercise the sentinel
+    tile: it must touch no queue or stat (tiles_visited unchanged)."""
+    corpus, index = setup
+    p = twolevel.original(gamma=0.2)
+    sh = shard_index(index, 3)  # 8 tiles -> 3 tiles/shard
+    ref = retrieve_batched(index, *_q(corpus), p)
+    for every in (2, 4):  # 2: padded tail round; 4 > tps: single round
+        res = shard_retrieve_batched(sh, *_q(corpus), p,
+                                     exchange_every=every)
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.scores, ref.scores)
+        np.testing.assert_allclose(res.stats["shard_tiles_visited"].sum(1),
+                                   res.stats["tiles_visited"])
+
+
 def test_one_device_mesh_equals_emulation(setup):
     """The real shard_map path on the 1-device mesh == the vmap path."""
     corpus, index = setup
-    p = twolevel.fast(k=K)
+    p = twolevel.fast()
     sh = shard_index(index, 1)
     emu = shard_retrieve_batched(sh, *_q(corpus), p)
     msh = shard_retrieve_batched(sh, *_q(corpus), p, mesh=make_shard_mesh(1))
@@ -165,13 +195,13 @@ def test_mesh_shard_count_mismatch_raises(setup):
     corpus, index = setup
     with pytest.raises(ValueError, match="shards"):
         shard_retrieve_batched(shard_index(index, 2), *_q(corpus),
-                               twolevel.fast(k=K), mesh=make_shard_mesh(1))
+                               twolevel.fast(), mesh=make_shard_mesh(1))
 
 
 def test_sharded_stats_consistent(setup):
     corpus, index = setup
     res = shard_retrieve_batched(shard_index(index, 4), *_q(corpus),
-                                 twolevel.fast(k=K))
+                                 twolevel.fast())
     s = res.stats
     assert np.all(s["docs_survived"] <= s["docs_present"])
     assert np.all(s["docs_frozen"] <= s["docs_survived"])
@@ -187,7 +217,7 @@ def test_sharded_server_matches_plain_server(setup):
     from repro.serve import (Request, RetrievalServer, ServerConfig,
                              ShardedRetrievalServer)
     corpus, index = setup
-    params = twolevel.fast(k=K)
+    params = twolevel.fast()
     cfg = ServerConfig(max_batch=4)
     plain = RetrievalServer(index, params, cfg)
     sharded = ShardedRetrievalServer(index, params, cfg, n_shards=3)
@@ -232,7 +262,7 @@ _MESH_PARITY_SCRIPT = textwrap.dedent("""
                     and np.array_equal(a.scores, b.scores))
 
     # rank-safe: collective path bit-identical to single device
-    p = twolevel.original(k=10, gamma=0.2)
+    p = twolevel.original(gamma=0.2)
     ref = retrieve_batched(index, *q, p)
     out["safe_docid"] = eq(shard_retrieve_batched(sh, *q, p, mesh=mesh), ref)
     pi = p.replace(schedule="impact")
@@ -240,7 +270,7 @@ _MESH_PARITY_SCRIPT = textwrap.dedent("""
         shard_retrieve_batched(sh, *q, pi, mesh=mesh),
         retrieve_batched(index, *q, pi))
     # guided: mesh path == emulation path (same math, collective merge)
-    pf = twolevel.fast(k=10)
+    pf = twolevel.fast()
     out["guided_mesh_eq_emu"] = eq(
         shard_retrieve_batched(sh, *q, pf, mesh=mesh),
         shard_retrieve_batched(sh, *q, pf))

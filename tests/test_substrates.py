@@ -216,7 +216,7 @@ def test_retrieval_server_latency_accounting(small_corpus):
     from repro.serve import Request, RetrievalServer, ServerConfig
     corpus = small_corpus
     index = build_index(corpus.merged("scaled"), tile_size=256)
-    srv = RetrievalServer(index, twolevel.fast(k=10),
+    srv = RetrievalServer(index, twolevel.fast(),
                           ServerConfig(max_batch=4, max_wait_ms=1.0))
     reqs = [Request(corpus.queries[i % len(corpus.queries)],
                     corpus.q_weights_b[i % len(corpus.queries)],

@@ -26,7 +26,7 @@ def _q(corpus, qi):
 def test_rank_safe_config_equals_exhaustive(setup, gamma):
     """alpha=beta=gamma: pruning is bound-exact for the combined score."""
     corpus, merged, index = setup
-    p = twolevel.original(k=10, gamma=gamma)
+    p = twolevel.original(gamma=gamma)
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                            corpus.q_weights_l, p)
     for qi in range(len(corpus.queries)):
@@ -38,7 +38,7 @@ def test_rank_safe_config_equals_exhaustive(setup, gamma):
 @pytest.mark.parametrize("schedule", ["docid", "impact"])
 def test_sequential_equals_batched(setup, schedule):
     corpus, merged, index = setup
-    p = twolevel.fast(k=10).replace(schedule=schedule)
+    p = twolevel.fast().replace(schedule=schedule)
     res_b = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                              corpus.q_weights_l, p)
     res_s = retrieve_sequential(index, corpus.queries[:4],
@@ -51,7 +51,7 @@ def test_sequential_equals_batched(setup, schedule):
 def test_impact_schedule_rank_safe_set_equality(setup):
     """Visit order must not change results for a rank-safe config."""
     corpus, merged, index = setup
-    p0 = twolevel.original(k=10, gamma=0.2)
+    p0 = twolevel.original(gamma=0.2)
     p1 = p0.replace(schedule="impact")
     r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                           corpus.q_weights_l, p0)
@@ -65,7 +65,7 @@ def test_doc_reordering_preserves_rank_safe_results(setup):
     corpus, merged, index = setup
     order = impact_doc_order(merged)
     index_r = build_index(merged, tile_size=256, doc_order=order)
-    p = twolevel.original(k=10, gamma=0.2)
+    p = twolevel.original(gamma=0.2)
     r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                           corpus.q_weights_l, p)
     r1 = retrieve_batched(index_r, corpus.queries, corpus.q_weights_b,
@@ -76,8 +76,8 @@ def test_doc_reordering_preserves_rank_safe_results(setup):
 
 def test_gti_is_special_case_alpha_beta_one(setup):
     corpus, merged, index = setup
-    gti = twolevel.gti(k=10, gamma=0.1)
-    manual = twolevel.TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.1, k=10)
+    gti = twolevel.gti(gamma=0.1)
+    manual = twolevel.TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.1)
     r0 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                           corpus.q_weights_l, gti)
     r1 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
@@ -88,7 +88,7 @@ def test_gti_is_special_case_alpha_beta_one(setup):
 def test_engine_matches_oracle_relevance(setup):
     """Tile engine prunes lazily vs per-doc DAAT: relevance metrics match."""
     corpus, merged, index = setup
-    p = twolevel.fast(k=10)
+    p = twolevel.fast()
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                            corpus.q_weights_l, p)
     oracle_ids = np.array([daat_2gti(merged, *_q(corpus, qi), p)[0]
@@ -102,7 +102,7 @@ def test_engine_matches_oracle_relevance(setup):
 def test_overestimation_prunes_more_and_degrades(setup):
     """Table 3: threshold over-estimation trades relevance for pruning."""
     corpus, merged, index = setup
-    base = twolevel.original(k=10, gamma=0.0)
+    base = twolevel.original(gamma=0.0)
     over = base.replace(threshold_factor=1.5)
     r_base = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
                               corpus.q_weights_l, base)
@@ -124,9 +124,9 @@ def test_guided_prunes_more_than_unguided(small_corpus):
     corpus = small_corpus
     index = build_index(corpus.merged("zero"), tile_size=256)
     r_org = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
-                             corpus.q_weights_l, twolevel.original(k=10))
+                             corpus.q_weights_l, twolevel.original())
     r_gti = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
-                             corpus.q_weights_l, twolevel.gti(k=10))
+                             corpus.q_weights_l, twolevel.gti())
     assert (r_gti.stats["docs_survived"].mean()
             < r_org.stats["docs_survived"].mean())
 
@@ -134,7 +134,7 @@ def test_guided_prunes_more_than_unguided(small_corpus):
 def test_stats_are_consistent(setup):
     corpus, merged, index = setup
     res = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
-                           corpus.q_weights_l, twolevel.fast(k=10))
+                           corpus.q_weights_l, twolevel.fast())
     s = res.stats
     assert np.all(s["docs_survived"] <= s["docs_present"])
     assert np.all(s["docs_frozen"] <= s["docs_survived"])
@@ -143,9 +143,9 @@ def test_stats_are_consistent(setup):
 
 def test_k_larger_than_matches(setup):
     corpus, merged, index = setup
-    p = twolevel.fast(k=500)
+    p = twolevel.fast()
     res = retrieve_batched(index, corpus.queries[:2], corpus.q_weights_b[:2],
-                           corpus.q_weights_l[:2], p)
+                           corpus.q_weights_l[:2], p, k=500)
     assert res.ids.shape == (2, 500)
     # padded tail exists but scored entries are sorted desc
     sc = res.scores[0]
@@ -157,7 +157,7 @@ def test_kernel_path_matches_jnp_path(setup):
     """Engine with the fused Pallas guided_score kernel (interpret mode)
     must match the pure-jnp tile scorer exactly."""
     corpus, merged, index = setup
-    p = twolevel.fast(k=10)
+    p = twolevel.fast()
     r_jnp = retrieve_batched(index, corpus.queries[:4],
                              corpus.q_weights_b[:4],
                              corpus.q_weights_l[:4], p)
