@@ -4,7 +4,7 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow test-api tier1 bench-smoke
+.PHONY: test test-fast test-slow test-api test-traversal tier1 bench-smoke
 
 test: test-fast test-slow
 
@@ -21,10 +21,19 @@ test-slow:
 test-api:
 	$(PYTEST) -m "not slow" tests/test_retrieval_api.py
 
+# Traversal fast lane: the chunked/full/kernel parity + early-exit suite
+# (the quickest signal when touching core/plan, core/traversal, or the
+# guided_score kernels).
+test-traversal:
+	$(PYTEST) -m "not slow" tests/test_traversal.py tests/test_kernels.py
+
 # The exact tier-1 command from ROADMAP.md (everything, fail-fast).
 tier1:
 	$(PYTEST) -x
 
-# Sharded-retrieval scaling benchmark on the 1-device mesh (seconds, CI).
+# Seconds-scale CI benches: the sharded scaling smoke (1-device mesh) and
+# the retrieval perf baseline — writes BENCH_retrieval.json (mrt_ms,
+# tiles_visited, chunks_dispatched per method) for later PRs to diff.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.sharded_scaling --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.retrieval_smoke

@@ -38,20 +38,32 @@ def index_for(preset: str, fill: str, seed: int = 0, tile: int = TILE,
 
 @functools.lru_cache(maxsize=64)
 def retriever_for(preset: str, fill: str, params, engine: str,
-                  seed: int = 0) -> Retriever:
-    """One facade per (index, params, engine); params hash by policy
-    fields, so threshold/schedule variants get distinct entries."""
+                  seed: int = 0, traversal: str = "full") -> Retriever:
+    """One facade per (index, params, engine, traversal); params hash by
+    policy fields, so threshold/schedule variants get distinct entries."""
+    opts = {} if engine == "sequential" else {"traversal": traversal}
     return Retriever.open(index_for(preset, fill, seed), params,
-                          engine=engine, k_buckets=None)
+                          engine=engine, k_buckets=None, **opts)
 
 
 def run_method(preset: str, fill: str, params, k: int = 10,
                timed: bool = True, seed: int = 0,
-               mrr_cutoff: int = 10):
-    """Run one method config at retrieval depth ``k``; returns metrics."""
+               mrr_cutoff: int = 10, traversal: str = "full"):
+    """Run one method config at retrieval depth ``k``; returns metrics.
+
+    ``traversal="chunked"`` routes the batched engine through the
+    early-exit chunk loop (descending-bound visit order); the returned
+    dict then carries real ``chunks_dispatched`` / ``n_chunks`` counts
+    (nan for the full scan and the sequential engine).
+    """
+    if timed and traversal != "full":
+        raise ValueError(
+            "timed runs use the sequential engine (host loop with physical "
+            "skips), which has no chunked traversal; pass timed=False for "
+            "chunked stats")
     c = corpus(preset, seed)
     r = retriever_for(preset, fill, params,
-                      "sequential" if timed else "batched", seed)
+                      "sequential" if timed else "batched", seed, traversal)
     resp = r.search(terms=c.queries, weights_b=c.q_weights_b,
                     weights_l=c.q_weights_l, k=k)
     if timed:
@@ -60,13 +72,18 @@ def run_method(preset: str, fill: str, params, k: int = 10,
         mrt = p99 = float("nan")
     m = evaluate_run(resp.ids, c.qrels, k, mrr_cutoff)
     st = resp.stats
+    nan = float("nan")
     return {"mrr": m["mrr"], "recall": m["recall"], "ndcg": m["ndcg"],
             "mrt_ms": mrt, "p99_ms": p99,
             "tiles_visited": float(np.mean(st["tiles_visited"])),
             "n_tiles": float(np.mean(st["n_tiles"])),
             "docs_survived": float(np.mean(st["docs_survived"])),
             "docs_present": float(np.mean(st["docs_present"])),
-            "docs_frozen": float(np.mean(st["docs_frozen"]))}
+            "docs_frozen": float(np.mean(st["docs_frozen"])),
+            "chunks_dispatched": (float(np.mean(st["chunks_dispatched"]))
+                                  if "chunks_dispatched" in st else nan),
+            "n_chunks": (float(np.mean(st["n_chunks"]))
+                         if "n_chunks" in st else nan)}
 
 
 METHODS = {

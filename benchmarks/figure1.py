@@ -1,6 +1,9 @@
 """Figure 1 analogue: recall@k and MRR@10 as retrieval depth k varies —
 the paper's headline phenomenon (GTI degrades as k shrinks; 2GTI tracks
-the original MaxScore)."""
+the original MaxScore). Each method also runs through the chunked batched
+engine (descending-bound chunk loop with early exit): the ``*_chunked``
+rows report ``chunks_dispatched`` next to ``tiles_visited`` — the
+dispatched-work fraction the chunk loop actually executed."""
 from __future__ import annotations
 
 from .common import METHODS, emit, run_method
@@ -12,7 +15,15 @@ def run(out) -> None:
     for method, fill in (("org", "scaled"), ("gti", "zero"),
                          ("2gti_acc", "scaled")):
         for k in KS:
-            r = run_method("splade_like", fill, METHODS[method](), k=k,
-                           timed=False)
-            out(emit(f"figure1/{method}/k{k}", float("nan"),
-                     {"recall_at_k": r["recall"], "mrr10": r["mrr"]}))
+            for traversal in ("full", "chunked"):
+                r = run_method("splade_like", fill, METHODS[method](), k=k,
+                               timed=False, traversal=traversal)
+                derived = {"recall_at_k": r["recall"], "mrr10": r["mrr"],
+                           "tiles_visited": r["tiles_visited"]}
+                suffix = ""
+                if traversal == "chunked":
+                    suffix = "_chunked"
+                    derived["chunks_dispatched"] = r["chunks_dispatched"]
+                    derived["n_chunks"] = r["n_chunks"]
+                out(emit(f"figure1/{method}{suffix}/k{k}", float("nan"),
+                         derived))

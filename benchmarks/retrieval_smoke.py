@@ -1,0 +1,103 @@
+"""Seconds-scale retrieval perf smoke: the recorded baseline later PRs
+diff against.
+
+    PYTHONPATH=src python -m benchmarks.retrieval_smoke [--out PATH]
+
+Writes ``BENCH_retrieval.json`` (repo root by default) with, per method:
+``mrt_ms`` (sequential-engine mean response time — the paper's latency
+regime), ``tiles_visited`` (full scan), and the chunked batched engine's
+``chunks_dispatched`` / ``n_chunks`` / ``tiles_visited`` — the
+dispatched-work reduction the early-exit chunk loop delivers. The corpus
+is tiny and seeded, so numbers are stable enough to diff across PRs
+(``make bench-smoke`` is the CI entry).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core import build_index, twolevel
+from repro.core.metrics import mean_and_p99
+from repro.data import make_corpus
+from repro.retrieval import Retriever
+
+try:  # package-relative when driven by benchmarks.run
+    from .common import emit
+except ImportError:  # python -m benchmarks.retrieval_smoke
+    from benchmarks.common import emit
+
+N_DOCS = 4096
+N_TERMS = 1024
+N_QUERIES = 16
+TILE = 128
+K = 10
+CHUNK_TILES = 4
+
+METHODS = (
+    ("org", twolevel.original),
+    ("gti", twolevel.gti),
+    ("2gti_fast", twolevel.fast),
+)
+
+
+def collect() -> dict:
+    corpus = make_corpus("splade_like", n_docs=N_DOCS, n_terms=N_TERMS,
+                         n_queries=N_QUERIES, seed=0)
+    index = build_index(corpus.merged("scaled"), tile_size=TILE)
+    queries = dict(terms=corpus.queries, weights_b=corpus.q_weights_b,
+                   weights_l=corpus.q_weights_l)
+    methods = {}
+    for name, preset in METHODS:
+        params = preset(chunk_tiles=CHUNK_TILES)
+        seq = Retriever.open(index, params, engine="sequential",
+                             k_buckets=None)
+        resp = seq.search(**queries, k=K)
+        mrt, p99 = mean_and_p99(resp.latencies_ms)
+        row = {"mrt_ms": round(mrt, 3), "p99_ms": round(p99, 3),
+               "tiles_visited": float(resp.stats["tiles_visited"].mean()),
+               "n_tiles": float(resp.stats["n_tiles"].mean())}
+        ck = Retriever.open(index, params, engine="batched",
+                            traversal="chunked", k_buckets=None)
+        cresp = ck.search(**queries, k=K)
+        row["chunked_tiles_visited"] = float(
+            cresp.stats["tiles_visited"].mean())
+        row["chunks_dispatched"] = float(
+            cresp.stats["chunks_dispatched"].mean())
+        row["n_chunks"] = float(cresp.stats["n_chunks"].mean())
+        methods[name] = row
+    return {"meta": {"corpus": "splade_like", "n_docs": N_DOCS,
+                     "n_terms": N_TERMS, "n_queries": N_QUERIES,
+                     "tile_size": TILE, "k": K,
+                     "chunk_tiles": CHUNK_TILES},
+            "methods": methods}
+
+
+def run(out) -> None:
+    data = collect()
+    for name, row in data["methods"].items():
+        out(emit(f"retrieval_smoke/{name}", row["mrt_ms"],
+                 {k: v for k, v in row.items() if k != "mrt_ms"}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_retrieval.json)")
+    args = ap.parse_args()
+    path = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_retrieval.json")
+    data = collect()
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    for name, row in data["methods"].items():
+        frac = row["chunks_dispatched"] / max(row["n_chunks"], 1.0)
+        print(f"{name}: mrt={row['mrt_ms']:.2f}ms "
+              f"tiles={row['tiles_visited']:.1f}/{row['n_tiles']:.0f} "
+              f"chunks={row['chunks_dispatched']:.1f}/{row['n_chunks']:.0f} "
+              f"({frac:.0%} dispatched)")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,11 +11,13 @@ mesh, one rep. Via ``benchmarks.run`` the module uses however many devices
 already exist and falls back to the vmap emulation path (bit-identical
 math, no cross-device traffic) for larger shard counts.
 
-Rows: ``sharded/<method>/s<shards>_e<exchange>`` with per-query latency,
-throughput, mean tiles visited per shard, and the max |score delta| vs
-the single-device ``batched`` engine (0 for rank-safe configs by
-construction; the parity *tests* pin bit-identity). Both sides run
-through the ``repro.retrieval.Retriever`` facade.
+Rows: ``sharded/<method>/s<shards>_e<exchange>[_chunked]`` with per-query
+latency, throughput, mean tiles visited per shard, and the max |score
+delta| vs the single-device ``batched`` engine (0 for rank-safe configs
+by construction; the parity *tests* pin bit-identity). ``_chunked`` rows
+run the per-shard early-exit chunk loop and add ``chunks_dispatched``
+next to the tiles-visited counts. Both sides run through the
+``repro.retrieval.Retriever`` facade.
 """
 from __future__ import annotations
 
@@ -62,29 +64,47 @@ def run(out, smoke: bool = False) -> None:
                         twolevel.fast().replace(schedule="impact")))
     queries = dict(terms=q[0], weights_b=q[1], weights_l=q[2])
     for name, params in methods:
-        ref = Retriever.open(index, params).search(**queries, k=10)
+        # per-traversal single-device references: chunked rows compare
+        # against the chunked batched engine (same descending-bound visit
+        # order), full rows against the schedule the method names
+        refs = {
+            trav: Retriever.open(index, params, traversal=trav
+                                 ).search(**queries, k=10)
+            for trav in ("full", "chunked")}
         for ns in shard_counts:
             sharded = shard_index(index, ns)
             mesh = make_shard_mesh(ns) if ns <= n_dev else None
             for exch in exchanges:
-                r = Retriever.open(sharded, params, engine="sharded",
-                                   mesh=mesh, exchange_every=exch)
-                res = r.search(**queries, k=10)  # compile untimed
-                t0 = time.perf_counter()
-                for _ in range(reps):
-                    res = r.search(**queries, k=10)
-                dt = (time.perf_counter() - t0) / reps
-                per_shard = res.stats["shard_tiles_visited"].mean(0)
-                delta = float(np.abs(res.scores - ref.scores).max())
-                out(emit(
-                    f"sharded/{name}/s{ns}_e{exch}", dt * 1e3 / b,
-                    {"qps": b / dt,
-                     "path": "mesh" if mesh is not None else "emu",
-                     "tiles_per_shard": "|".join(
-                         f"{v:.1f}" for v in per_shard),
-                     "tiles_total": float(res.stats["tiles_visited"].mean()),
-                     "score_delta_vs_1dev": delta,
-                     "ids_equal": bool(np.array_equal(res.ids, ref.ids))}))
+                for trav in ("full", "chunked"):
+                    r = Retriever.open(sharded, params, engine="sharded",
+                                       mesh=mesh, exchange_every=exch,
+                                       traversal=trav)
+                    res = r.search(**queries, k=10)  # compile untimed
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        res = r.search(**queries, k=10)
+                    dt = (time.perf_counter() - t0) / reps
+                    ref = refs[trav]
+                    per_shard = res.stats["shard_tiles_visited"].mean(0)
+                    delta = float(np.abs(res.scores - ref.scores).max())
+                    derived = {
+                        "qps": b / dt,
+                        "path": "mesh" if mesh is not None else "emu",
+                        "tiles_per_shard": "|".join(
+                            f"{v:.1f}" for v in per_shard),
+                        "tiles_total": float(
+                            res.stats["tiles_visited"].mean()),
+                        "score_delta_vs_1dev": delta,
+                        "ids_equal": bool(np.array_equal(res.ids, ref.ids))}
+                    suffix = ""
+                    if trav == "chunked":
+                        suffix = "_chunked"
+                        derived["chunks_dispatched"] = float(
+                            res.stats["chunks_dispatched"].mean())
+                        derived["n_chunks"] = float(
+                            res.stats["n_chunks"].mean())
+                    out(emit(f"sharded/{name}/s{ns}_e{exch}{suffix}",
+                             dt * 1e3 / b, derived))
 
 
 def main() -> None:

@@ -1,6 +1,9 @@
 """Table 7 / Appendix B analogue: block-max (BMW-style) bounds vs list-level
 MaxScore bounds under 2GTI, across k — plus the beyond-paper impact-ordered
-schedule, the TPU-native traversal refinement."""
+schedule, the TPU-native traversal refinement. For each bound mode the
+``*_chunked`` row runs the chunked batched engine (the impact order folded
+into early-exit chunks) and reports ``chunks_dispatched`` next to the
+tiles-visited count."""
 from __future__ import annotations
 
 from repro.core import twolevel
@@ -19,3 +22,12 @@ def run(out) -> None:
                          {"mrr": r["mrr"], "recall": r["recall"],
                           "tiles": r["tiles_visited"],
                           "frozen": r["docs_frozen"]}))
+            pc = twolevel.fast().replace(bound_mode=bound)
+            rc = run_method("unicoil_like", "scaled", pc, k=k,
+                            timed=False, traversal="chunked")
+            out(emit(f"table7/{bound}_chunked/k{k}", float("nan"),
+                     {"mrr": rc["mrr"], "recall": rc["recall"],
+                      "tiles": rc["tiles_visited"],
+                      "frozen": rc["docs_frozen"],
+                      "chunks_dispatched": rc["chunks_dispatched"],
+                      "n_chunks": rc["n_chunks"]}))

@@ -142,11 +142,15 @@ def build_index(merged: MergedPostings, tile_size: int = 2048,
 @partial(jax.jit, static_argnames=("pad_len", "tile_size"))
 def gather_tile(docids: jax.Array, w_b: jax.Array, w_l: jax.Array,
                 tile_ptr: jax.Array, q_terms: jax.Array, tile: jax.Array,
+                qw_b: jax.Array | None = None, qw_l: jax.Array | None = None,
                 *, pad_len: int, tile_size: int):
     """Fetch padded posting runs of query terms inside one tile.
 
     Returns (offs [Nq, P] int32 local doc offsets, -1 where padded;
-             wb, wl [Nq, P] f32 zero-padded).
+             wb, wl [Nq, P] f32 zero-padded). ``qw_b``/``qw_l`` (optional,
+    [Nq]) scale each term's posting weights by the query weight — the
+    executors' query-weighted gather; omitted = raw index weights. This
+    is the single gather implementation shared by every traversal mode.
     """
     start = tile_ptr[q_terms, tile]            # [Nq]
     cnt = tile_ptr[q_terms, tile + 1] - start  # [Nq]
@@ -157,4 +161,8 @@ def gather_tile(docids: jax.Array, w_b: jax.Array, w_l: jax.Array,
     offs = jnp.where(mask, d - tile * tile_size, -1).astype(jnp.int32)
     wb = jnp.where(mask, jnp.take(w_b, idx, mode="clip"), 0.0)
     wl = jnp.where(mask, jnp.take(w_l, idx, mode="clip"), 0.0)
+    if qw_b is not None:
+        wb = wb * qw_b[:, None]
+    if qw_l is not None:
+        wl = wl * qw_l[:, None]
     return offs, wb, wl

@@ -80,6 +80,52 @@ def tile_schedule(plan: QueryPlan, tile_max_b, tile_max_l, alpha,
     return jnp.arange(n_tiles, dtype=jnp.int32)
 
 
+class ChunkSchedule(NamedTuple):
+    """Descending-bound tile order folded into static fixed-size chunks —
+    the Block-Max-Pruning visit structure (process blocks in descending
+    bound order, stop when the next bound clears the threshold) mapped
+    onto a shape-static ``lax.while_loop`` carrier."""
+    chunks: jax.Array    # [n_chunks, chunk_tiles] int32 tile ids; the
+    #                      sentinel ``n_tiles`` pads the tail chunk and is
+    #                      force-skipped by the executor (tile_valid False)
+    chunk_ub: jax.Array  # [n_chunks] f32 max tile upper bound per chunk
+    #                      (-inf for all-padding chunks): the early-exit
+    #                      test operand. Descending by construction.
+
+
+def chunk_schedule(plan: QueryPlan, tile_max_b, tile_max_l, alpha,
+                   n_tiles: int, chunk_tiles: int,
+                   n_real: int | jax.Array | None = None) -> ChunkSchedule:
+    """Chunked visit order: sort tiles by descending global upper bound and
+    pad into static ``[n_chunks, chunk_tiles]`` groups.
+
+    Because tiles are sorted descending, the per-chunk max bound is the
+    bound of the chunk's first tile, and the sequence ``chunk_ub`` is
+    itself descending — so the first chunk whose bound fails the theta_Gl
+    test proves every later tile fails it too, and the executor may stop.
+
+    ``n_real`` (sharded path): tiles with id >= n_real are shape padding;
+    their bound is forced to -inf so they sort last and never keep the
+    chunk loop alive. The sentinel id ``n_tiles`` pads the ragged tail.
+    """
+    ub = tile_upper_bounds(plan, tile_max_b, tile_max_l, alpha)
+    if n_real is not None:
+        ub = jnp.where(jnp.arange(n_tiles) < n_real, ub, -jnp.inf)
+    # Same expression as the ``impact`` tile_schedule: identical tie-break
+    # order, which is what makes the chunked scan bit-identical to it.
+    order = jnp.argsort(-ub).astype(jnp.int32)
+    ub_sorted = ub[order]
+    n_chunks = -(-n_tiles // chunk_tiles)
+    pad = n_chunks * chunk_tiles - n_tiles
+    if pad:
+        order = jnp.concatenate(
+            [order, jnp.full((pad,), n_tiles, jnp.int32)])
+        ub_sorted = jnp.concatenate(
+            [ub_sorted, jnp.full((pad,), -jnp.inf, jnp.float32)])
+    chunks = order.reshape(n_chunks, chunk_tiles)
+    return ChunkSchedule(chunks, ub_sorted.reshape(n_chunks, chunk_tiles).max(1))
+
+
 def term_bounds(plan: QueryPlan, tile_max_b, tile_max_l, tile,
                 alpha, beta, bound_mode: str):
     """Bounds for one tile visit: per-term maxima under both combinations

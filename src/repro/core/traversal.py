@@ -25,8 +25,12 @@ one contract ``(offs, wb, wl, essential, prefix_beta, th_lo, ...)`` and are
 interchangeable per ``use_kernel``. ``_tile_step`` is the executor step
 driven by every traversal mode:
 
-  - ``retrieve_batched``: vmap over queries x lax.scan over tiles (TPU path;
-    skips are masked compute, turned into real skips by the Pallas kernel).
+  - ``retrieve_batched`` (``traversal="full"``): vmap over queries x
+    lax.scan over tiles (TPU path; skipped tiles are masked compute).
+  - ``retrieve_batched`` (``traversal="chunked"``/``"chunked_fused"``):
+    descending-bound tile chunks under a ``lax.while_loop`` that stops at
+    the first bound-failing chunk — *real* work elision under jit
+    (Block-Max-Pruning structure; see ``_retrieve_chunked_impl``).
   - ``retrieve_sequential``: host loop with *physical* tile skipping, timing
     each query — the paper's single-threaded latency regime.
   - ``serve.sharded.shard_retrieve_batched``: per-shard tile scans under
@@ -42,9 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .index import BlockedImpactIndex
-from .plan import (QueryPlan, combine, essential_terms, freeze_bounds,
-                   plan_query, term_bounds, tile_schedule, tile_upper_bounds)
+from .index import BlockedImpactIndex, gather_tile
+from .plan import (QueryPlan, chunk_schedule, combine, essential_terms,
+                   freeze_bounds, plan_query, term_bounds, tile_schedule,
+                   tile_upper_bounds)
 from .twolevel import TwoLevelParams, resolve_k
 
 NEG_INF = jnp.float32(-jnp.inf)
@@ -172,17 +177,10 @@ def _score_tile_kernel(offs, wb, wl, essential, prefix_beta, th_lo,
 
 def _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl, tile,
                  *, pad_len: int, tile_size: int):
-    start = tile_ptr[qt, tile]
-    cnt = tile_ptr[qt, tile + 1] - start
-    lane = jnp.arange(pad_len, dtype=jnp.int32)[None, :]
-    idx = start[:, None] + lane
-    mask = lane < cnt[:, None]
-    idx = jnp.where(mask, idx, 0)
-    d = jnp.take(docids, idx, mode="clip")
-    offs = jnp.where(mask, d - tile * tile_size, -1).astype(jnp.int32)
-    wb = jnp.where(mask, jnp.take(w_b, idx, mode="clip"), 0.0) * qwb[:, None]
-    wl = jnp.where(mask, jnp.take(w_l, idx, mode="clip"), 0.0) * qwl[:, None]
-    return offs, wb, wl
+    """Query-weighted padded tile gather — delegates to the single gather
+    implementation in ``core.index.gather_tile``."""
+    return gather_tile(docids, w_b, w_l, tile_ptr, qt, tile, qwb, qwl,
+                       pad_len=pad_len, tile_size=tile_size)
 
 
 def _tile_step(idx_arrays, plan: QueryPlan, carry, tile,
@@ -245,6 +243,192 @@ def _init_carry(k):
     return (vals, ids, vals, ids, vals, ids, jnp.zeros(5, dtype=jnp.float32))
 
 
+TRAVERSALS = ("full", "chunked", "chunked_fused")
+
+
+def _chunk_scan(idx_arrays, plan, carry, tiles_chunk, alpha, beta, gamma,
+                factor, n_valid, *, th_floor=None, **statics):
+    """Advance one query's carry over one chunk of its tile order.
+
+    Exact per-tile semantics: every tile re-reads the carry's thresholds,
+    so the operation sequence is identical to the full scan's — the chunk
+    grouping only decides how much of the schedule is dispatched at all.
+    ``n_valid`` force-skips sentinel/padding tiles (id >= n_valid)."""
+    def step(c, tile):
+        return _tile_step(idx_arrays, plan, c, tile, alpha, beta, gamma,
+                          factor, th_floor=th_floor,
+                          tile_valid=tile < n_valid, **statics), None
+    return jax.lax.scan(step, carry, tiles_chunk)[0]
+
+
+def _chunk_while(advance, chunk_ub, carries, disp, th_floor, factor):
+    """Early-exit loop over a chunk sequence — the single copy of the
+    Block-Max-Pruning termination rule, shared by the batched executor
+    and the sharded per-shard rounds (``serve.sharded._chunk_round``).
+
+    Dispatches chunk ``i`` (``advance(i, carries)``) while any query's
+    next chunk bound beats its (floored) theta_Gl; per-chunk bounds are
+    descending and thresholds only tighten, so the first failing chunk
+    proves every later tile fails its per-tile skip test too. ``disp``
+    accumulates the per-query count of chunks that were live when
+    dispatched. All operands are batched over queries ([B] leading dim);
+    ``th_floor`` is -inf when no exchanged global theta applies."""
+    n_c = chunk_ub.shape[1]
+
+    def th_of(carries):
+        return jnp.maximum(carries[0][:, -1], th_floor) * factor
+
+    def cond(state):
+        i, carries, _ = state
+        ub_i = jax.lax.dynamic_index_in_dim(chunk_ub, i, 1, False)
+        return (i < n_c) & jnp.any(ub_i > th_of(carries))
+
+    def body(state):
+        i, carries, disp = state
+        ub_i = jax.lax.dynamic_index_in_dim(chunk_ub, i, 1, False)
+        active = ub_i > th_of(carries)
+        carries = advance(i, carries)
+        return i + 1, carries, disp + active.astype(jnp.float32)
+
+    _, carries, disp = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), carries, disp))
+    return carries, disp
+
+
+def _chunk_step_fused(idx_arrays, plan, carry, tiles_chunk,
+                      alpha, beta, gamma, factor, n_valid,
+                      *, k, kq, pad_len, tile_size, bound_mode,
+                      th_floor=None):
+    """Advance one query's carry over one chunk via the multi-tile Pallas
+    ``guided_score_chunk`` kernel (one pallas_call per chunk).
+
+    The skip predicate, essential partition and freeze bounds for every
+    tile in the chunk derive from the *chunk-start* thresholds (the carry
+    cannot be updated mid-kernel). Within a chunk that only loosens the
+    pruning, so rank-safe configs stay bound-exact; guided configs follow
+    a slightly different (still bound-safe) threshold trajectory — the
+    usual guided tolerance, pinned in test_traversal."""
+    from ..kernels.guided_score import guided_score_chunk
+    docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l = idx_arrays
+    gv, gi, lv, li, rv, ri, st = carry
+    th_gl = gv[-1]
+    if th_floor is not None:
+        th_gl = jnp.maximum(th_gl, th_floor)
+    th_gl = th_gl * factor
+    th_lo = lv[-1] * factor
+
+    m_alpha, m_beta, ub_gl = jax.vmap(
+        lambda t: term_bounds(plan, tile_max_b, tile_max_l, t,
+                              alpha, beta, bound_mode))(tiles_chunk)
+    skip = (ub_gl <= th_gl) | (tiles_chunk >= n_valid)        # [C]
+    essential = jax.vmap(essential_terms, in_axes=(0, None))(m_alpha, th_gl)
+    prefix_beta = jax.vmap(freeze_bounds)(m_beta)
+    offs, wb, wl = jax.vmap(
+        lambda t: _gather_tile(docids, w_b, w_l, tile_ptr,
+                               plan.qt, plan.qwb, plan.qwl, t,
+                               pad_len=pad_len, tile_size=tile_size)
+    )(tiles_chunk)                                            # [C, Nq, P]
+
+    out = guided_score_chunk(offs, wb, wl, essential.astype(jnp.float32),
+                             prefix_beta, skip, th_lo, alpha, beta, gamma,
+                             tile_size=tile_size,
+                             block_s=min(512, tile_size))
+    g, l, r = out[:, 0], out[:, 1], out[:, 2]
+    eval_mask = out[:, 3] > 0
+    rank_mask = out[:, 4] > 0
+
+    # Stats exactly as _score_tile_kernel derives them, chunk-vectorized:
+    # presence re-counted from the gathered offsets (one scatter per tile).
+    S = tile_size
+    valid = offs >= 0
+    offs_safe = jnp.where(valid, offs, S).astype(jnp.int32)
+
+    def present_one(v, o):
+        cnt = jax.ops.segment_sum(v.ravel().astype(jnp.float32), o.ravel(),
+                                  num_segments=S + 1)[:S]
+        return (cnt > 0).sum().astype(jnp.float32)
+    present = jax.vmap(present_one)(valid, offs_safe)
+    tile_stats = jnp.stack(
+        [present, out[:, 4].sum(1),
+         (rank_mask & ~eval_mask).sum(1).astype(jnp.float32),
+         valid.sum((1, 2)).astype(jnp.float32)], axis=1)      # [C, 4]
+
+    def merge_step(c, xs):
+        gv, gi, lv, li, rv, ri, st = c
+        tile, g_t, l_t, r_t, ev_t, rk_t, sk_t, st_t = xs
+        base = tile * tile_size
+
+        def masked(cand):
+            vals, idx = cand
+            return jnp.where(sk_t, NEG_INF, vals), base + idx
+        gv, gi = _merge_queue(gv, gi, *masked(_tile_topk(g_t, ev_t, kq)), k)
+        lv, li = _merge_queue(lv, li, *masked(_tile_topk(l_t, ev_t, kq)), k)
+        rv, ri = _merge_queue(rv, ri, *masked(_tile_topk(r_t, rk_t, kq)), k)
+        visited = jnp.where(sk_t, 0.0, 1.0)
+        st = st + jnp.concatenate([jnp.where(sk_t, 0.0, st_t),
+                                   visited[None]])
+        return (gv, gi, lv, li, rv, ri, st), None
+    carry, _ = jax.lax.scan(
+        merge_step, carry,
+        (tiles_chunk, g, l, r, eval_mask, rank_mask, skip, tile_stats))
+    return carry
+
+
+@partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
+                                   "n_tiles", "bound_mode", "chunk_tiles",
+                                   "use_kernel", "fused"))
+def _retrieve_chunked_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
+                           sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                           alpha, beta, gamma, factor,
+                           *, k, kq, pad_len, tile_size, n_tiles, bound_mode,
+                           chunk_tiles, use_kernel=False, fused=False):
+    """Chunked traversal: real skipping under jit.
+
+    Tiles are presorted by descending global upper bound and folded into
+    static ``[n_chunks, chunk_tiles]`` groups (``core.plan.chunk_schedule``);
+    a ``lax.while_loop`` dispatches one chunk per iteration and terminates
+    at the first chunk whose max bound fails the theta_Gl test. Bounds
+    descend and thresholds only tighten, so every undispatched tile would
+    have been skipped by the full impact-ordered scan anyway — results and
+    stats are bit-identical to it while a fraction of the chunks execute.
+    Under vmap-over-queries the loop runs until every query's bound fails
+    (per-query ``chunks_dispatched`` still counts each query's own work).
+    """
+    idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
+
+    def plan_one(qt, qwb, qwl):
+        plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
+        sched = chunk_schedule(plan, tile_max_b, tile_max_l, alpha,
+                               n_tiles, chunk_tiles)
+        return plan, sched
+    plans, sched = jax.vmap(plan_one)(q_terms, qw_b, qw_l)
+    chunks, chunk_ub = sched          # [B, n_chunks, C], [B, n_chunks]
+    b = q_terms.shape[0]
+    carries = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (b,) + x.shape), _init_carry(k))
+    statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
+                   bound_mode=bound_mode)
+
+    if fused:
+        def step_one(plan, tiles_i, carry):
+            return _chunk_step_fused(idx_arrays, plan, carry, tiles_i,
+                                     alpha, beta, gamma, factor, n_tiles,
+                                     **statics)
+    else:
+        def step_one(plan, tiles_i, carry):
+            return _chunk_scan(idx_arrays, plan, carry, tiles_i,
+                               alpha, beta, gamma, factor, n_tiles,
+                               use_kernel=use_kernel, **statics)
+
+    def advance(i, carries):
+        tiles_i = jax.lax.dynamic_index_in_dim(chunks, i, 1, False)
+        return jax.vmap(step_one)(plans, tiles_i, carries)
+
+    return _chunk_while(advance, chunk_ub, carries,
+                        jnp.zeros(b, jnp.float32),
+                        jnp.full(b, -jnp.inf, jnp.float32), factor)
+
+
 @partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
                                    "n_tiles", "bound_mode", "schedule",
                                    "use_kernel"))
@@ -277,30 +461,65 @@ def _retrieve_batched_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
 def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
                      params: TwoLevelParams,
                      use_kernel: bool = False,
-                     k: int | None = None) -> RetrievalResult:
+                     k: int | None = None,
+                     traversal: str = "full",
+                     chunk_tiles: int | None = None) -> RetrievalResult:
     """Batched retrieval: q_terms [B, Nq] int32 (pad with qw = 0).
 
     ``k`` is the retrieval depth for this call (falls back to the
     deprecated ``params.k`` stash, then DEFAULT_K). ``use_kernel=True``
     routes tile scoring through the fused Pallas guided_score kernel
-    (interpret mode on CPU; native on TPU)."""
+    (native on TPU; interpreter elsewhere).
+
+    ``traversal``:
+      - ``"full"`` — lax.scan over all tiles in ``params.schedule`` order;
+        skipped tiles are masked compute (the historical engine).
+      - ``"chunked"`` — descending-bound tile chunks under a
+        ``lax.while_loop`` that stops at the first bound-failing chunk:
+        bit-identical (ids, scores, stats) to the full scan with the
+        ``impact`` schedule while dispatching only the live chunk prefix.
+        Stats gain ``chunks_dispatched`` / ``n_chunks``.
+      - ``"chunked_fused"`` — same chunk loop, but each chunk is scored by
+        one multi-tile ``guided_score_chunk`` pallas_call whose skip/
+        essential/freeze inputs come from the chunk-start thresholds:
+        rank-safe configs stay exact; guided configs track the exact
+        chunked path within the usual guided tolerance.
+    ``chunk_tiles`` overrides ``params.chunk_tiles`` for this call.
+    """
+    if traversal not in TRAVERSALS:
+        raise ValueError(f"traversal must be in {TRAVERSALS}, "
+                         f"got {traversal!r}")
     q_terms = jnp.asarray(q_terms, dtype=jnp.int32)
     qw_b = jnp.asarray(qw_b, dtype=jnp.float32)
     qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
     k = resolve_k(params, k)
     kq = min(k, index.tile_size)
-    out = _retrieve_batched_impl(
-        index.docids, index.w_b, index.w_l, index.tile_ptr,
-        index.tile_max_b, index.tile_max_l, index.sigma_b, index.sigma_l,
-        q_terms, qw_b, qw_l,
-        jnp.float32(params.alpha), jnp.float32(params.beta),
-        jnp.float32(params.gamma), jnp.float32(params.threshold_factor),
-        k=k, kq=kq, pad_len=index.pad_len, tile_size=index.tile_size,
-        n_tiles=index.n_tiles, bound_mode=params.bound_mode,
-        schedule=params.schedule, use_kernel=use_kernel)
+    arrays = (index.docids, index.w_b, index.w_l, index.tile_ptr,
+              index.tile_max_b, index.tile_max_l,
+              index.sigma_b, index.sigma_l, q_terms, qw_b, qw_l,
+              jnp.float32(params.alpha), jnp.float32(params.beta),
+              jnp.float32(params.gamma), jnp.float32(params.threshold_factor))
+    statics = dict(k=k, kq=kq, pad_len=index.pad_len,
+                   tile_size=index.tile_size, bound_mode=params.bound_mode)
+    disp = None
+    if traversal == "full":
+        out = _retrieve_batched_impl(*arrays, n_tiles=index.n_tiles,
+                                     schedule=params.schedule,
+                                     use_kernel=use_kernel, **statics)
+    else:
+        ct = int(chunk_tiles if chunk_tiles is not None
+                 else params.chunk_tiles)
+        out, disp = _retrieve_chunked_impl(
+            *arrays, n_tiles=index.n_tiles, chunk_tiles=ct,
+            use_kernel=use_kernel, fused=traversal == "chunked_fused",
+            **statics)
     gv, gi, lv, li, rv, ri, st = jax.tree_util.tree_map(np.asarray, out)
     stats = dict(zip(STAT_KEYS, st.T))
-    stats["n_tiles"] = np.full(q_terms.shape[0], index.n_tiles, np.float32)
+    b = q_terms.shape[0]
+    stats["n_tiles"] = np.full(b, index.n_tiles, np.float32)
+    if disp is not None:
+        stats["chunks_dispatched"] = np.asarray(disp)
+        stats["n_chunks"] = np.full(b, -(-index.n_tiles // ct), np.float32)
     return RetrievalResult(ids=index.to_orig(ri), scores=rv,
                            global_ids=index.to_orig(gi),
                            local_ids=index.to_orig(li), stats=stats)

@@ -56,19 +56,25 @@ class TwoLevelParams:
     # tighten fastest and traversal can stop at the first bound-failing
     # tile (beyond-paper, score-at-a-time flavored; still bound-safe).
     schedule: str = "docid"
+    # Tiles per dispatch chunk for the ``traversal="chunked"`` executors:
+    # the descending-bound tile order is folded into static groups of this
+    # size and the chunk loop exits at the first bound-failing chunk
+    # (Block-Max-Pruning structure). Only read by chunked traversal.
+    chunk_tiles: int = 8
 
     # ``k`` keeps its historical positional slot so pre-deprecation call
     # sites (including positional ones) stay bit-compatible.
     def __init__(self, alpha: float = 1.0, beta: float = 0.3,
                  gamma: float = 0.05, k: int | None = None,
                  threshold_factor: float = 1.0, bound_mode: str = "list",
-                 schedule: str = "docid"):
+                 schedule: str = "docid", chunk_tiles: int = 8):
         object.__setattr__(self, "alpha", alpha)
         object.__setattr__(self, "beta", beta)
         object.__setattr__(self, "gamma", gamma)
         object.__setattr__(self, "threshold_factor", threshold_factor)
         object.__setattr__(self, "bound_mode", bound_mode)
         object.__setattr__(self, "schedule", schedule)
+        object.__setattr__(self, "chunk_tiles", chunk_tiles)
         if k is not None:
             _warn_k_deprecated()
             k = int(k)
@@ -80,6 +86,8 @@ class TwoLevelParams:
             raise ValueError(f"bound_mode must be in {BOUND_MODES}")
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be in {SCHEDULES}")
+        if self.chunk_tiles < 1:
+            raise ValueError(f"chunk_tiles={self.chunk_tiles} must be >= 1")
         for name in ("alpha", "beta", "gamma"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:

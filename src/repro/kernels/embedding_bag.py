@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import default_interpret
+
 
 def _kernel(idx_ref, w_ref, tab_ref, o_ref, *, block_b: int, bag_len: int):
     def body(n, _):
@@ -33,8 +35,12 @@ def _kernel(idx_ref, w_ref, tab_ref, o_ref, *, block_b: int, bag_len: int):
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def embedding_bag(table, indices, weights, *, block_b: int = 8,
-                  interpret: bool = True):
-    """table: [V, D]; indices, weights: [B, L] -> out [B, D] (weighted sum)."""
+                  interpret: bool | None = None):
+    """table: [V, D]; indices, weights: [B, L] -> out [B, D] (weighted sum).
+
+    ``interpret=None``: native lowering on TPU, interpreter elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
     v, d = table.shape
     b, l = indices.shape
     block_b = min(block_b, b)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -76,12 +78,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i,
 def flash_attention(q, k, v, *, causal: bool = True,
                     sm_scale: float | None = None, block_q: int = 128,
                     block_k: int = 128, kv_offset: int = 0,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """q: [H, Sq, D]; k, v: [Hkv, Skv, D] with H % Hkv == 0.
 
     ``kv_offset``: absolute position of q row 0 (decode: cache length).
     Batch dimension: vmap this function.
+    ``interpret=None``: native lowering on TPU, interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = default_interpret()
     h, sq, d = q.shape
     hkv, skv, _ = k.shape
     assert h % hkv == 0

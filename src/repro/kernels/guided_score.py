@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import default_interpret
+
 
 def _kernel(scal_ref, ess_ref, pbeta_ref, offs_ref, wb_ref, wl_ref,
             out_ref, dense_b, dense_l, *, nq: int, block_s: int):
@@ -85,8 +87,13 @@ def _kernel(scal_ref, ess_ref, pbeta_ref, offs_ref, wb_ref, wl_ref,
                                              "interpret"))
 def guided_score_tile(offs, wb, wl, essential, prefix_beta, th_lo,
                       alpha, beta, gamma, *, tile_size: int,
-                      block_s: int = 512, interpret: bool = True):
-    """Score one (query, tile) pair. Returns [5, tile_size] (see kernel)."""
+                      block_s: int = 512, interpret: bool | None = None):
+    """Score one (query, tile) pair. Returns [5, tile_size] (see kernel).
+
+    ``interpret=None`` resolves via :func:`pallas_env.default_interpret`:
+    native lowering on TPU backends, Python interpreter elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
     nq, p = offs.shape
     block_s = min(block_s, tile_size)
     assert tile_size % block_s == 0
@@ -111,3 +118,112 @@ def guided_score_tile(offs, wb, wl, essential, prefix_beta, th_lo,
         interpret=interpret,
     )(scal, essential.astype(jnp.float32), prefix_beta.astype(jnp.float32),
       offs, wb, wl)
+
+
+def _chunk_kernel(scal_ref, ess_ref, pbeta_ref, skip_ref,
+                  offs_ref, wb_ref, wl_ref, out_ref, dense_b, dense_l,
+                  *, nq: int, block_s: int):
+    """One grid cell = (tile-in-chunk, lane block). The per-tile skip
+    predicate lives in SMEM and gates the scatter + freeze passes via
+    ``pl.when`` — a skipped tile costs a predicate read and one zero-fill
+    instead of the full MXU scatter and freeze loop, which is what makes
+    chunk-level skipping *real* work elision inside a single pallas_call.
+    """
+    th_lo = scal_ref[0]
+    alpha = scal_ref[1]
+    beta = scal_ref[2]
+    gamma = scal_ref[3]
+    c = pl.program_id(0)
+    base = pl.program_id(1) * block_s
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+
+    # Skipped tiles publish all-zero scores and masks: zero masks mean no
+    # candidate survives, so the caller's queue merge is a no-op for them.
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(skip_ref[c] == 0)
+    def _score():
+        # Pass 1: scatter postings to dense rows via one-hot matvec (MXU),
+        # accumulating essential presence for the global level.
+        def scatter(i, ess_cnt):
+            offs = offs_ref[0, i, :][None, :]                  # [1, P]
+            onehot = (offs.T == lane).astype(jnp.float32)      # [P, S_blk]
+            db = jnp.dot(wb_ref[0, i, :][None, :], onehot,
+                         preferred_element_type=jnp.float32)
+            dl = jnp.dot(wl_ref[0, i, :][None, :], onehot,
+                         preferred_element_type=jnp.float32)
+            valid = (offs >= 0).astype(jnp.float32)
+            cnt = jnp.dot(valid, onehot, preferred_element_type=jnp.float32)
+            dense_b[i, :] = db[0]
+            dense_l[i, :] = dl[0]
+            return ess_cnt + ess_ref[c, i] * cnt
+        ess_cnt = jax.lax.fori_loop(
+            0, nq, scatter, jnp.zeros((1, block_s), jnp.float32))
+        survive = (ess_cnt > 0).astype(jnp.float32)
+
+        # Pass 2: descending freeze loop (local level).
+        def freeze(j, carry):
+            i = nq - 1 - j
+            sb, sl, alive = carry
+            l_part = beta * sb + (1.0 - beta) * sl
+            ok = jnp.where(ess_ref[c, i] > 0, 1.0,
+                           (l_part + pbeta_ref[c, i] > th_lo
+                            ).astype(jnp.float32))
+            alive = alive * ok
+            gate = survive * alive
+            sb = sb + gate * dense_b[i, :][None, :]
+            sl = sl + gate * dense_l[i, :][None, :]
+            return sb, sl, alive
+        zero = jnp.zeros((1, block_s), jnp.float32)
+        sb, sl, alive = jax.lax.fori_loop(
+            0, nq, freeze, (zero, zero, jnp.ones((1, block_s), jnp.float32)))
+
+        out_ref[0, 0, :] = (alpha * sb + (1.0 - alpha) * sl)[0]  # Global
+        out_ref[0, 1, :] = (beta * sb + (1.0 - beta) * sl)[0]    # Local
+        out_ref[0, 2, :] = (gamma * sb + (1.0 - gamma) * sl)[0]  # RankScore
+        out_ref[0, 3, :] = (survive * alive)[0]                  # eval mask
+        out_ref[0, 4, :] = survive[0]                            # rank mask
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size", "block_s",
+                                             "interpret"))
+def guided_score_chunk(offs, wb, wl, essential, prefix_beta, skip, th_lo,
+                       alpha, beta, gamma, *, tile_size: int,
+                       block_s: int = 512, interpret: bool | None = None):
+    """Score a whole chunk of tiles for one query in one ``pallas_call``.
+
+    Grid = (chunk_tiles, lane blocks): per-tile dispatch overhead is
+    amortized over the chunk and the per-tile ``skip`` predicate (int32,
+    [C]; nonzero = skip) turns bound-failing tiles into near-free grid
+    cells. Inputs are chunk-stacked: offs/wb/wl [C, Nq, P], essential /
+    prefix_beta [C, Nq] (per-tile planner outputs derived from the
+    *chunk-start* thetas — within the chunk that only loosens pruning,
+    so rank-safe configs stay exact). Returns [C, 5, tile_size].
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n_chunk, nq, p = offs.shape
+    block_s = min(block_s, tile_size)
+    assert tile_size % block_s == 0
+    scal = jnp.stack([th_lo, alpha, beta, gamma]).astype(jnp.float32)
+    grid = (n_chunk, tile_size // block_s)
+    kern = functools.partial(_chunk_kernel, nq=nq, block_s=block_s)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # scalars
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # essential
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # prefix_beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # skip
+            pl.BlockSpec((1, nq, p), lambda c, s: (c, 0, 0)),      # offs
+            pl.BlockSpec((1, nq, p), lambda c, s: (c, 0, 0)),      # wb
+            pl.BlockSpec((1, nq, p), lambda c, s: (c, 0, 0)),      # wl
+        ],
+        out_specs=pl.BlockSpec((1, 5, block_s), lambda c, s: (c, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((n_chunk, 5, tile_size), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nq, block_s), jnp.float32),
+                        pltpu.VMEM((nq, block_s), jnp.float32)],
+        interpret=interpret,
+    )(scal, essential.astype(jnp.float32), prefix_beta.astype(jnp.float32),
+      skip.astype(jnp.int32), offs, wb, wl)

@@ -1,14 +1,14 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True everywhere in this repo (CPU container);
-on a real TPU deployment set ``REPRO_PALLAS_COMPILE=1`` to lower natively.
+Every kernel takes ``interpret=None`` and resolves it per process via
+``pallas_env.default_interpret``: native lowering when the default
+backend is a TPU, the Python interpreter elsewhere. Override both ways
+with ``REPRO_PALLAS_COMPILE=1`` (force native) / ``=0`` (force
+interpreter).
 """
 from __future__ import annotations
 
-import os
-
 from .embedding_bag import embedding_bag  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
-from .guided_score import guided_score_tile  # noqa: F401
-
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+from .guided_score import guided_score_chunk, guided_score_tile  # noqa: F401
+from .pallas_env import default_interpret  # noqa: F401

@@ -72,28 +72,50 @@ def _require_bii(index, engine: str) -> BlockedImpactIndex:
 
 @register_engine("batched")
 class BatchedEngine:
-    """vmap-over-queries lax.scan tile scan; pure-jnp tile scorer."""
+    """vmap-over-queries lax.scan tile scan; pure-jnp tile scorer.
+
+    ``traversal="chunked"`` replaces the all-tiles scan with the
+    descending-bound chunk loop (``lax.while_loop`` with early exit):
+    bit-identical to the ``impact``-schedule full scan while dispatching
+    only the live chunk prefix; stats gain ``chunks_dispatched``.
+    ``chunk_tiles`` overrides ``params.chunk_tiles``.
+    """
 
     use_kernel = False
+    traversals = ("full", "chunked")
 
     # NOTE: engines deliberately hold no pruning params — the policy for
     # each call arrives via search(params=...) (possibly with a per-call
     # threshold_factor override), so storing the open-time copy would
     # only invite stale reads.
-    def __init__(self, index, params: TwoLevelParams):
+    def __init__(self, index, params: TwoLevelParams,
+                 traversal: str = "full", chunk_tiles: int | None = None):
         self.index = _require_bii(index, self.name)
+        if traversal not in self.traversals:
+            raise ValueError(
+                f"engine {self.name!r} supports traversal in "
+                f"{self.traversals}, got {traversal!r}")
+        self.traversal = traversal
+        self.chunk_tiles = chunk_tiles
 
     def search(self, terms, weights_b, weights_l, dense, *, k, params):
         return retrieve_batched(self.index, terms, weights_b, weights_l,
-                                params, use_kernel=self.use_kernel, k=k)
+                                params, use_kernel=self.use_kernel, k=k,
+                                traversal=self.traversal,
+                                chunk_tiles=self.chunk_tiles)
 
 
 @register_engine("kernel")
 class KernelEngine(BatchedEngine):
     """Batched scan routed through the fused Pallas guided_score kernel
-    (interpret mode on CPU, native on TPU)."""
+    (native on TPU, interpreter elsewhere). ``traversal="chunked"`` keeps
+    the per-tile kernel inside the chunk loop (bit-identical early exit);
+    ``"chunked_fused"`` scores each chunk with one multi-tile
+    ``guided_score_chunk`` pallas_call (chunk-start thresholds: rank-safe
+    exact, guided within the usual tolerance)."""
 
     use_kernel = True
+    traversals = ("full", "chunked", "chunked_fused")
 
 
 @register_engine("sequential")
@@ -122,10 +144,14 @@ class ShardedEngine:
     def __init__(self, index, params: TwoLevelParams, *,
                  n_shards: int | None = None, mesh=None,
                  axis_name: str = "shard", use_kernel: bool = False,
-                 exchange_every: int = 0):
+                 exchange_every: int = 0, traversal: str = "full",
+                 chunk_tiles: int | None = None):
         # deferred: serve.sharded imports serve.engine, which uses the
         # Retriever facade — a module-level import here would be circular
         from ..core.shard_plan import ShardedImpactIndex, shard_index
+        if traversal not in ("full", "chunked"):
+            raise ValueError(f"engine {self.name!r} supports traversal in "
+                             f"('full', 'chunked'), got {traversal!r}")
         if mesh is not None and n_shards is None:
             n_shards = mesh.shape[axis_name]
         if isinstance(index, ShardedImpactIndex):
@@ -137,6 +163,8 @@ class ShardedEngine:
         self.axis_name = axis_name
         self.use_kernel = use_kernel
         self.exchange_every = exchange_every
+        self.traversal = traversal
+        self.chunk_tiles = chunk_tiles
 
     def search(self, terms, weights_b, weights_l, dense, *, k, params):
         from ..serve.sharded import shard_retrieve_batched
@@ -144,7 +172,8 @@ class ShardedEngine:
             self.sharded, terms, weights_b, weights_l, params,
             mesh=self.mesh, axis_name=self.axis_name,
             use_kernel=self.use_kernel,
-            exchange_every=self.exchange_every, k=k)
+            exchange_every=self.exchange_every, k=k,
+            traversal=self.traversal, chunk_tiles=self.chunk_tiles)
 
 
 @register_engine("dense")

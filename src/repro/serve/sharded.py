@@ -41,10 +41,10 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..core.plan import plan_query, tile_schedule
+from ..core.plan import chunk_schedule, plan_query, tile_schedule
 from ..core.shard_plan import ShardedImpactIndex
-from ..core.traversal import (STAT_KEYS, RetrievalResult, _init_carry,
-                              _tile_step)
+from ..core.traversal import (STAT_KEYS, RetrievalResult, _chunk_scan,
+                              _chunk_while, _init_carry, _tile_step)
 from ..core.twolevel import TwoLevelParams, resolve_k
 from ..dist.collectives import ring_gather_stack
 from .engine import RetrievalServer, ServerConfig
@@ -110,6 +110,69 @@ def _plan_shard(tm_b, tm_l, sigma_b, sigma_l, q_terms, qw_b, qw_l, alpha,
     return jax.vmap(one)(q_terms, qw_b, qw_l)
 
 
+def _plan_shard_chunked(tm_b, tm_l, sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                        alpha, n_real, *, tiles_per_shard, chunk_tiles):
+    """Chunked planner for one shard: plans [B, ...] plus the descending
+    chunk order [B, n_chunks, C] / bounds [B, n_chunks]. Shape-padding
+    tiles (id >= ``n_real``) get -inf bounds so they sort last and never
+    keep the chunk loop alive; the sentinel ``tiles_per_shard`` pads the
+    ragged tail chunk."""
+    def one(qt, qwb, qwl):
+        plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
+        sched = chunk_schedule(plan, tm_b, tm_l, alpha, tiles_per_shard,
+                               chunk_tiles, n_real)
+        return plan, sched
+    return jax.vmap(one)(q_terms, qw_b, qw_l)
+
+
+def _fold_chunk_rounds(chunks, chunk_ub, tiles_per_shard: int,
+                       exchange_every: int, chunk_tiles: int):
+    """Fold a chunk order [..., n_chunks, C] into exchange rounds
+    [..., n_rounds, per_round, C] (+ bounds [..., n_rounds, per_round]).
+
+    The exchange period is counted in tiles (as for the full scan) and
+    rounded up to whole chunks; the tail round is padded with all-sentinel
+    chunks (bound -inf) so the round loop stays a single ``lax.scan``.
+    """
+    n_chunks = chunks.shape[-2]
+    if 0 < exchange_every:
+        per_round = min(max(1, -(-exchange_every // chunk_tiles)), n_chunks)
+    else:
+        per_round = n_chunks
+    n_rounds = -(-n_chunks // per_round)
+    pad = n_rounds * per_round - n_chunks
+    if pad:
+        chunks = jnp.concatenate(
+            [chunks, jnp.full(chunks.shape[:-2] + (pad, chunks.shape[-1]),
+                              tiles_per_shard, jnp.int32)], axis=-2)
+        chunk_ub = jnp.concatenate(
+            [chunk_ub, jnp.full(chunk_ub.shape[:-1] + (pad,), -jnp.inf,
+                                jnp.float32)], axis=-1)
+    chunks = chunks.reshape(
+        chunks.shape[:-2] + (n_rounds, per_round, chunks.shape[-1]))
+    chunk_ub = chunk_ub.reshape(chunk_ub.shape[:-1] + (n_rounds, per_round))
+    return chunks, chunk_ub
+
+
+def _chunk_round(idx_arrays, n_real, plans, chunks_round, ub_round,
+                 carries, disp, th_floor,
+                 alpha, beta, gamma, factor, *, statics):
+    """Advance all queries of one shard over one round of chunks with a
+    real early exit — the shared ``core.traversal._chunk_while`` loop
+    over per-query ``_chunk_scan`` steps, with the exchanged global
+    theta as the threshold floor."""
+    def step_one(plan, tiles_i, carry, floor):
+        return _chunk_scan(idx_arrays, plan, carry, tiles_i,
+                           alpha, beta, gamma, factor, n_real,
+                           th_floor=floor, **statics)
+
+    def advance(i, carries):
+        tiles_i = jax.lax.dynamic_index_in_dim(chunks_round, i, 1, False)
+        return jax.vmap(step_one)(plans, tiles_i, carries, th_floor)
+
+    return _chunk_while(advance, ub_round, carries, disp, th_floor, factor)
+
+
 def _scan_chunk(idx_arrays, n_real, plans, tiles_chunk, carries, th_floor,
                 alpha, beta, gamma, factor, *, statics):
     """Advance all queries of one shard over a chunk of its tile order.
@@ -138,66 +201,104 @@ def _rebase(ids, base):
 
 @partial(jax.jit, static_argnames=(
     "k", "kq", "pad_len", "tile_size", "bound_mode", "use_kernel",
-    "schedule", "tiles_per_shard", "n_shards", "exchange_every"))
+    "schedule", "tiles_per_shard", "n_shards", "exchange_every",
+    "traversal", "chunk_tiles"))
 def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
                            n_real, sigma_b, sigma_l, q_terms, qw_b, qw_l,
                            alpha, beta, gamma, factor,
                            *, k, kq, pad_len, tile_size, bound_mode,
                            use_kernel, schedule, tiles_per_shard, n_shards,
-                           exchange_every):
+                           exchange_every, traversal="full", chunk_tiles=8):
     statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
                    bound_mode=bound_mode, use_kernel=use_kernel)
     b = q_terms.shape[0]
-    planner = partial(_plan_shard, tiles_per_shard=tiles_per_shard,
-                      schedule=schedule)
-    plans, tiles = jax.vmap(
-        lambda mb, ml: planner(mb, ml, sigma_b, sigma_l,
-                               q_terms, qw_b, qw_l, alpha))(tm_b, tm_l)
     carries = _broadcast_carry(k, n_shards, b)
     no_floor = jnp.full((b,), -jnp.inf, jnp.float32)
-    scan = partial(_scan_chunk, statics=statics)
 
-    def run_round(carries, tiles_round, floor):
-        return jax.vmap(scan, in_axes=(0, 0, 0, 0, 0, None,
-                                       None, None, None, None))(
-            (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
-            n_real, plans, tiles_round, carries, floor,
-            alpha, beta, gamma, factor)
+    if traversal == "chunked":
+        planner = partial(_plan_shard_chunked, tiles_per_shard=tiles_per_shard,
+                          chunk_tiles=chunk_tiles)
+        plans, sched = jax.vmap(
+            lambda mb, ml, nr: planner(mb, ml, sigma_b, sigma_l,
+                                       q_terms, qw_b, qw_l, alpha, nr)
+        )(tm_b, tm_l, n_real)
+        # [n_shards, B, R, per, C] -> rounds-first [R, n_shards, B, per, C]
+        chunks, chunk_ub = _fold_chunk_rounds(
+            sched.chunks, sched.chunk_ub, tiles_per_shard,
+            exchange_every, chunk_tiles)
+        chunks = jnp.moveaxis(chunks, 2, 0)
+        chunk_ub = jnp.moveaxis(chunk_ub, 2, 0)
+        disp = jnp.zeros((n_shards, b), jnp.float32)
+        round_fn = partial(_chunk_round, statics=statics)
 
-    # [n_shards, B, C, E] -> rounds-first [C, n_shards, B, E]
-    rounds = jnp.moveaxis(
-        _fold_schedule(tiles, tiles_per_shard, exchange_every), 2, 0)
-    # round 0 has no exchanged floor; every later round derives the exact
-    # global theta from the carries at round *start* — the between-rounds
-    # exchange of the old unrolled loop, now inside one lax.scan (two
-    # compiled segments total, independent of the round count)
-    carries = run_round(carries, rounds[0], no_floor)
-    if rounds.shape[0] > 1:
-        def round_step(carries, tiles_round):
-            floor = _global_theta(carries[0], k)
-            return run_round(carries, tiles_round, floor), None
-        carries, _ = jax.lax.scan(round_step, carries, rounds[1:])
+        def run_round(carries, disp, chunks_round, ub_round, floor):
+            return jax.vmap(round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, None,
+                                               None, None, None, None))(
+                (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
+                n_real, plans, chunks_round, ub_round, carries, disp,
+                floor, alpha, beta, gamma, factor)
+
+        carries, disp = run_round(carries, disp, chunks[0], chunk_ub[0],
+                                  no_floor)
+        if chunks.shape[0] > 1:
+            def round_step(state, xs):
+                carries, disp = state
+                floor = _global_theta(carries[0], k)
+                return run_round(carries, disp, xs[0], xs[1], floor), None
+            (carries, disp), _ = jax.lax.scan(
+                round_step, (carries, disp), (chunks[1:], chunk_ub[1:]))
+    else:
+        disp = None
+        planner = partial(_plan_shard, tiles_per_shard=tiles_per_shard,
+                          schedule=schedule)
+        plans, tiles = jax.vmap(
+            lambda mb, ml: planner(mb, ml, sigma_b, sigma_l,
+                                   q_terms, qw_b, qw_l, alpha))(tm_b, tm_l)
+        scan = partial(_scan_chunk, statics=statics)
+
+        def run_round(carries, tiles_round, floor):
+            return jax.vmap(scan, in_axes=(0, 0, 0, 0, 0, None,
+                                           None, None, None, None))(
+                (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
+                n_real, plans, tiles_round, carries, floor,
+                alpha, beta, gamma, factor)
+
+        # [n_shards, B, C, E] -> rounds-first [C, n_shards, B, E]
+        rounds = jnp.moveaxis(
+            _fold_schedule(tiles, tiles_per_shard, exchange_every), 2, 0)
+        # round 0 has no exchanged floor; every later round derives the
+        # exact global theta from the carries at round *start* — the
+        # between-rounds exchange of the old unrolled loop, now inside one
+        # lax.scan (two compiled segments total, independent of the round
+        # count)
+        carries = run_round(carries, rounds[0], no_floor)
+        if rounds.shape[0] > 1:
+            def round_step(carries, tiles_round):
+                floor = _global_theta(carries[0], k)
+                return run_round(carries, tiles_round, floor), None
+            carries, _ = jax.lax.scan(round_step, carries, rounds[1:])
     gv, gi, lv, li, rv, ri, st = carries
     gi, li, ri = (jax.vmap(_rebase)(i, doc_base) for i in (gi, li, ri))
     gv, gi = _merge_stacked(gv, gi, k)
     lv, li = _merge_stacked(lv, li, k)
     rv, ri = _merge_stacked(rv, ri, k)
-    return gv, gi, lv, li, rv, ri, st
+    return gv, gi, lv, li, rv, ri, st, disp
 
 
 @partial(jax.jit, static_argnames=(
     "k", "kq", "pad_len", "tile_size", "bound_mode", "use_kernel",
     "schedule", "tiles_per_shard", "n_shards", "exchange_every",
-    "mesh", "axis_name"))
+    "mesh", "axis_name", "traversal", "chunk_tiles"))
 def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
                        n_real, sigma_b, sigma_l, q_terms, qw_b, qw_l,
                        alpha, beta, gamma, factor,
                        *, k, kq, pad_len, tile_size, bound_mode, use_kernel,
                        schedule, tiles_per_shard, n_shards, exchange_every,
-                       mesh, axis_name):
+                       mesh, axis_name, traversal="full", chunk_tiles=8):
     statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
                    bound_mode=bound_mode, use_kernel=use_kernel)
     scan = partial(_scan_chunk, statics=statics)
+    chunked = traversal == "chunked"
 
     def local_fn(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
                  sigma_b, sigma_l, q_terms, qw_b, qw_l,
@@ -206,28 +307,64 @@ def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
         idx_arrays = (docids[0], w_b[0], w_l[0],
                       tile_ptr[0], tm_b[0], tm_l[0])
         b = q_terms.shape[0]
-        plans, tiles = _plan_shard(tm_b[0], tm_l[0], sigma_b, sigma_l,
-                                   q_terms, qw_b, qw_l, alpha,
-                                   tiles_per_shard=tiles_per_shard,
-                                   schedule=schedule)
         carries = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (b,) + x.shape), _init_carry(k))
         no_floor = jnp.full((b,), -jnp.inf, jnp.float32)
-        # [B, C, E] -> rounds-first [C, B, E]; round 0 runs floor-less,
-        # later rounds all-gather the exact global theta at round start
-        # (same collective count as the old unrolled between-rounds loop)
-        rounds = jnp.moveaxis(
-            _fold_schedule(tiles, tiles_per_shard, exchange_every), 1, 0)
-        carries = scan(idx_arrays, n_real[0], plans, rounds[0],
-                       carries, no_floor, alpha, beta, gamma, factor)
-        if rounds.shape[0] > 1:
-            def round_step(carries, tiles_round):
-                gv_all = ring_gather_stack(carries[0], axis_name, n_shards)
-                floor = _global_theta(gv_all, k)
-                carries = scan(idx_arrays, n_real[0], plans, tiles_round,
-                               carries, floor, alpha, beta, gamma, factor)
-                return carries, None
-            carries, _ = jax.lax.scan(round_step, carries, rounds[1:])
+        if chunked:
+            plans, sched = _plan_shard_chunked(
+                tm_b[0], tm_l[0], sigma_b, sigma_l, q_terms, qw_b, qw_l,
+                alpha, n_real[0], tiles_per_shard=tiles_per_shard,
+                chunk_tiles=chunk_tiles)
+            # [B, R, per, C] -> rounds-first [R, B, per, C]; round 0 runs
+            # floor-less, later rounds all-gather the exact global theta
+            # at round start and early-exit within the round's chunk loop
+            chunks, chunk_ub = _fold_chunk_rounds(
+                sched.chunks, sched.chunk_ub, tiles_per_shard,
+                exchange_every, chunk_tiles)
+            chunks = jnp.moveaxis(chunks, 1, 0)
+            chunk_ub = jnp.moveaxis(chunk_ub, 1, 0)
+            disp = jnp.zeros((b,), jnp.float32)
+            round_fn = partial(_chunk_round, statics=statics)
+            carries, disp = round_fn(idx_arrays, n_real[0], plans,
+                                     chunks[0], chunk_ub[0], carries, disp,
+                                     no_floor, alpha, beta, gamma, factor)
+            if chunks.shape[0] > 1:
+                def round_step(state, xs):
+                    carries, disp = state
+                    gv_all = ring_gather_stack(carries[0], axis_name,
+                                               n_shards)
+                    floor = _global_theta(gv_all, k)
+                    carries, disp = round_fn(
+                        idx_arrays, n_real[0], plans, xs[0], xs[1],
+                        carries, disp, floor, alpha, beta, gamma, factor)
+                    return (carries, disp), None
+                (carries, disp), _ = jax.lax.scan(
+                    round_step, (carries, disp), (chunks[1:], chunk_ub[1:]))
+            disp_out = disp[None]
+        else:
+            plans, tiles = _plan_shard(tm_b[0], tm_l[0], sigma_b, sigma_l,
+                                       q_terms, qw_b, qw_l, alpha,
+                                       tiles_per_shard=tiles_per_shard,
+                                       schedule=schedule)
+            # [B, C, E] -> rounds-first [C, B, E]; round 0 runs floor-less,
+            # later rounds all-gather the exact global theta at round start
+            # (same collective count as the old unrolled between-rounds
+            # loop)
+            rounds = jnp.moveaxis(
+                _fold_schedule(tiles, tiles_per_shard, exchange_every), 1, 0)
+            carries = scan(idx_arrays, n_real[0], plans, rounds[0],
+                           carries, no_floor, alpha, beta, gamma, factor)
+            if rounds.shape[0] > 1:
+                def round_step(carries, tiles_round):
+                    gv_all = ring_gather_stack(carries[0], axis_name,
+                                               n_shards)
+                    floor = _global_theta(gv_all, k)
+                    carries = scan(idx_arrays, n_real[0], plans, tiles_round,
+                                   carries, floor, alpha, beta, gamma,
+                                   factor)
+                    return carries, None
+                carries, _ = jax.lax.scan(round_step, carries, rounds[1:])
+            disp_out = jnp.zeros((1, b), jnp.float32)
         gv, gi, lv, li, rv, ri, st = carries
         gi, li, ri = (_rebase(i, doc_base[0]) for i in (gi, li, ri))
         merged = []
@@ -236,7 +373,7 @@ def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
             ai = ring_gather_stack(ids, axis_name, n_shards)
             merged.append(_merge_stacked(av, ai, k))
         (gv, gi), (lv, li), (rv, ri) = merged
-        return gv, gi, lv, li, rv, ri, st[None]
+        return gv, gi, lv, li, rv, ri, st[None], disp_out
 
     sh = P(axis_name)
     sh2 = P(axis_name, None)
@@ -248,11 +385,13 @@ def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
         in_specs=(sh2, sh2, sh2, sh3, sh3, sh3, sh, sh,
                   rep1, rep1, rep2, rep2, rep2,
                   scal, scal, scal, scal),
-        out_specs=(rep2, rep2, rep2, rep2, rep2, rep2, sh3),
+        out_specs=(rep2, rep2, rep2, rep2, rep2, rep2, sh3, sh2),
         check_rep=False)
-    return f(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
-             sigma_b, sigma_l, q_terms, qw_b, qw_l,
-             alpha, beta, gamma, factor)
+    out = f(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
+            sigma_b, sigma_l, q_terms, qw_b, qw_l,
+            alpha, beta, gamma, factor)
+    gv, gi, lv, li, rv, ri, st, disp = out
+    return gv, gi, lv, li, rv, ri, st, (disp if chunked else None)
 
 
 def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
@@ -260,7 +399,10 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
                            axis_name: str = "shard",
                            use_kernel: bool = False,
                            exchange_every: int = 0,
-                           k: int | None = None) -> RetrievalResult:
+                           k: int | None = None,
+                           traversal: str = "full",
+                           chunk_tiles: int | None = None
+                           ) -> RetrievalResult:
     """Sharded batched retrieval over a stacked shard index.
 
     ``mesh=None`` runs the vmap emulation path (any shard count on one
@@ -271,21 +413,35 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
     round loop is one ``lax.scan`` over sentinel-padded rounds, so fine
     periods compile at production tile counts. ``k`` is the per-call
     retrieval depth (legacy ``params.k`` fallback).
+
+    ``traversal="chunked"``: each shard scans its tiles in descending
+    local-bound chunks of ``chunk_tiles`` (default ``params.chunk_tiles``)
+    under a ``lax.while_loop`` that stops at the first bound-failing chunk
+    — bit-identical to the ``impact``-schedule full scan per shard
+    (shape-padding tiles sort last with -inf bounds and never keep the
+    loop alive). With ``exchange_every=E`` the exchange period is rounded
+    up to whole chunks and the early exit applies within each round.
+    Stats gain ``chunks_dispatched`` / ``n_chunks`` (summed over shards).
     """
     if mesh is not None and mesh.shape[axis_name] != sharded.n_shards:
         raise ValueError(
             f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} but "
             f"the index has {sharded.n_shards} shards")
+    if traversal not in ("full", "chunked"):
+        raise ValueError(f"sharded traversal must be 'full' or 'chunked', "
+                         f"got {traversal!r}")
     q_terms = jnp.asarray(q_terms, dtype=jnp.int32)
     qw_b = jnp.asarray(qw_b, dtype=jnp.float32)
     qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
     k = resolve_k(params, k)
     kq = min(k, sharded.tile_size)
+    ct = int(chunk_tiles if chunk_tiles is not None else params.chunk_tiles)
     kw = dict(k=k, kq=kq, pad_len=sharded.pad_len,
               tile_size=sharded.tile_size, bound_mode=params.bound_mode,
               use_kernel=use_kernel, schedule=params.schedule,
               tiles_per_shard=sharded.tiles_per_shard,
-              n_shards=sharded.n_shards, exchange_every=exchange_every)
+              n_shards=sharded.n_shards, exchange_every=exchange_every,
+              traversal=traversal, chunk_tiles=ct)
     args = (sharded.docids, sharded.w_b, sharded.w_l, sharded.tile_ptr,
             sharded.tile_max_b, sharded.tile_max_l, sharded.doc_base,
             sharded.n_real_tiles,
@@ -296,7 +452,7 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
         out = _sharded_impl_emulated(*args, **kw)
     else:
         out = _sharded_impl_mesh(*args, **kw, mesh=mesh, axis_name=axis_name)
-    gv, gi, lv, li, rv, ri, st = jax.tree_util.tree_map(np.asarray, out)
+    gv, gi, lv, li, rv, ri, st, disp = jax.tree_util.tree_map(np.asarray, out)
     agg = st.sum(0)                                    # [B, 5]
     stats = dict(zip(STAT_KEYS, agg.T))
     b = q_terms.shape[0]
@@ -304,6 +460,11 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
     # denominator — skip rates stay comparable with retrieve_batched
     stats["n_tiles"] = np.full(b, sharded.n_tiles, np.float32)
     stats["shard_tiles_visited"] = st[:, :, 4].T       # [B, n_shards]
+    if disp is not None:
+        stats["chunks_dispatched"] = disp.sum(0)       # [B]
+        n_chunks = -(-sharded.tiles_per_shard // ct) * sharded.n_shards
+        stats["n_chunks"] = np.full(b, n_chunks, np.float32)
+        stats["shard_chunks_dispatched"] = disp.T      # [B, n_shards]
     return RetrievalResult(ids=sharded.to_orig(ri), scores=rv,
                            global_ids=sharded.to_orig(gi),
                            local_ids=sharded.to_orig(li), stats=stats)
@@ -320,10 +481,12 @@ class ShardedRetrievalServer(RetrievalServer):
                  cfg: ServerConfig | None = None, *,
                  n_shards: int | None = None, mesh=None,
                  axis_name: str = "shard", use_kernel: bool = False,
-                 exchange_every: int = 0, k: int | None = None):
+                 exchange_every: int = 0, k: int | None = None,
+                 traversal: str = "full", chunk_tiles: int | None = None):
         super().__init__(index, params, cfg, engine="sharded", k=k,
                          n_shards=n_shards, mesh=mesh, axis_name=axis_name,
                          use_kernel=use_kernel,
-                         exchange_every=exchange_every)
+                         exchange_every=exchange_every,
+                         traversal=traversal, chunk_tiles=chunk_tiles)
         self.sharded = self.retriever.engine.sharded
         self.mesh = mesh

@@ -7,7 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.guided_score import guided_score_tile
+from repro.kernels.guided_score import guided_score_chunk, guided_score_tile
 
 
 def _tile_inputs(rng, nq, p, tile_size, density=0.5):
@@ -87,6 +87,52 @@ def test_guided_score_matches_traversal_scorer(small_corpus):
                                       jnp.float32(0.05), tile_size=256)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_chunk,nq,p,tile_size,block_s", [
+    (4, 8, 64, 256, 128), (3, 5, 96, 384, 128), (2, 8, 128, 512, 512)])
+def test_guided_score_chunk_matches_per_tile(n_chunk, nq, p, tile_size,
+                                             block_s):
+    """The multi-tile chunk kernel must equal per-tile guided_score_tile
+    calls on every live tile and publish all-zero planes for skipped ones
+    (the SMEM skip predicate gating the scatter/freeze passes)."""
+    rng = np.random.default_rng(n_chunk * 100 + nq)
+    tiles = [_tile_inputs(rng, nq, p, tile_size) for _ in range(n_chunk)]
+    offs = jnp.stack([t[0] for t in tiles])
+    wb = jnp.stack([t[1] for t in tiles])
+    wl = jnp.stack([t[2] for t in tiles])
+    essential = jnp.asarray(rng.random((n_chunk, nq)) < 0.5, jnp.float32)
+    prefix_beta = jnp.asarray(np.cumsum(rng.random((n_chunk, nq)), axis=1),
+                              jnp.float32)
+    skip = jnp.asarray([i % 2 for i in range(n_chunk)], jnp.int32)
+    scal = (jnp.float32(2.0), jnp.float32(1.0), jnp.float32(0.3),
+            jnp.float32(0.05))
+    out = guided_score_chunk(offs, wb, wl, essential, prefix_beta, skip,
+                             *scal, tile_size=tile_size, block_s=block_s)
+    assert out.shape == (n_chunk, 5, tile_size)
+    for c in range(n_chunk):
+        if int(skip[c]):
+            np.testing.assert_array_equal(np.asarray(out[c]), 0.0)
+        else:
+            per_tile = guided_score_tile(
+                offs[c], wb[c], wl[c], essential[c], prefix_beta[c],
+                *scal, tile_size=tile_size, block_s=block_s)
+            np.testing.assert_allclose(np.asarray(out[c]),
+                                       np.asarray(per_tile),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_guided_score_chunk_all_skipped_is_zero():
+    rng = np.random.default_rng(0)
+    offs, wb, wl = _tile_inputs(rng, 4, 32, 128)
+    offs, wb, wl = (jnp.stack([a, a]) for a in (offs, wb, wl))
+    essential = jnp.ones((2, 4), jnp.float32)
+    prefix_beta = jnp.ones((2, 4), jnp.float32)
+    out = guided_score_chunk(offs, wb, wl, essential, prefix_beta,
+                             jnp.ones(2, jnp.int32), jnp.float32(0.0),
+                             jnp.float32(1.0), jnp.float32(0.3),
+                             jnp.float32(0.05), tile_size=128)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
 
 
 @pytest.mark.parametrize("h,hkv,sq,skv,d,causal,off", [

@@ -71,6 +71,50 @@ def test_every_engine_serves_a_request(setup, engine):
     assert resp.stats
 
 
+@pytest.mark.parametrize("engine,traversal", [
+    ("batched", "chunked"), ("kernel", "chunked"),
+    ("kernel", "chunked_fused"), ("sharded", "chunked")])
+def test_traversal_knob_serves_and_reports_chunks(setup, engine, traversal):
+    """The chunked-traversal knob opens through the facade for every
+    engine that supports it and surfaces the chunks_dispatched stat."""
+    corpus, index = setup
+    p = twolevel.fast().replace(chunk_tiles=2)
+    opts = {"n_shards": 2} if engine == "sharded" else {}
+    r = Retriever.open(index, p, engine=engine, traversal=traversal, **opts)
+    resp = r.search(**_q(corpus), k=5)
+    assert resp.ids.shape == (len(corpus.queries), 5)
+    assert "chunks_dispatched" in resp.stats
+    assert (resp.stats["chunks_dispatched"]
+            <= resp.stats["n_chunks"]).all()
+
+
+@pytest.mark.parametrize("engine,traversal", [
+    ("batched", "chunked_fused"), ("batched", "nope"),
+    ("kernel", "nope"), ("sharded", "chunked_fused")])
+def test_unsupported_traversal_raises_at_open(setup, engine, traversal):
+    corpus, index = setup
+    opts = {"n_shards": 2} if engine == "sharded" else {}
+    with pytest.raises(ValueError, match="traversal"):
+        Retriever.open(index, twolevel.fast(), engine=engine,
+                       traversal=traversal, **opts)
+
+
+def test_chunked_facade_matches_legacy_chunked(setup):
+    """Facade + chunked knob == the legacy entry point's chunked path."""
+    corpus, index = setup
+    p = twolevel.fast().replace(chunk_tiles=2)
+    legacy = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                              corpus.q_weights_l, p, k=10,
+                              traversal="chunked")
+    r = Retriever.open(index, p, engine="batched", traversal="chunked",
+                       k_buckets=None)
+    resp = r.search(**_q(corpus), k=10)
+    np.testing.assert_array_equal(resp.ids, legacy.ids)
+    np.testing.assert_array_equal(resp.scores, legacy.scores)
+    np.testing.assert_array_equal(resp.stats["chunks_dispatched"],
+                                  legacy.stats["chunks_dispatched"])
+
+
 # -- facade vs legacy entry points, bit-identical -----------------------------
 
 @pytest.mark.parametrize("params", [twolevel.original(gamma=0.2),

@@ -191,6 +191,58 @@ def test_one_device_mesh_equals_emulation(setup):
     np.testing.assert_array_equal(msh.scores, emu.scores)
 
 
+# -- chunked per-shard traversal ----------------------------------------------
+
+@pytest.mark.parametrize("exchange_every", [0, 2])
+@pytest.mark.parametrize("n_shards", [1, 3, 4])
+def test_sharded_chunked_bit_identical_to_full_impact(setup, n_shards,
+                                                      exchange_every):
+    """Per-shard chunk loops visit each shard's tiles in descending-bound
+    order — bit-identical to the impact-schedule full sharded scan (ids,
+    scores, tiles_visited), shape-padding tiles included (n_shards=3 pads
+    the tail shard). chunks_dispatched never exceeds the chunk grid."""
+    corpus, index = setup
+    p = twolevel.fast().replace(chunk_tiles=2)
+    sh = shard_index(index, n_shards)
+    full = shard_retrieve_batched(sh, *_q(corpus),
+                                  p.replace(schedule="impact"),
+                                  exchange_every=exchange_every)
+    ck = shard_retrieve_batched(sh, *_q(corpus), p, traversal="chunked",
+                                exchange_every=exchange_every)
+    np.testing.assert_array_equal(full.ids, ck.ids)
+    np.testing.assert_array_equal(full.scores, ck.scores)
+    np.testing.assert_array_equal(full.stats["tiles_visited"],
+                                  ck.stats["tiles_visited"])
+    assert (ck.stats["chunks_dispatched"] <= ck.stats["n_chunks"]).all()
+    assert ck.stats["shard_chunks_dispatched"].shape == (
+        len(corpus.queries), n_shards)
+    np.testing.assert_allclose(ck.stats["shard_chunks_dispatched"].sum(1),
+                               ck.stats["chunks_dispatched"])
+
+
+def test_sharded_chunked_mesh_equals_emulation(setup):
+    """The chunk while_loop under shard_map == the vmap emulation path
+    (including the chunks_dispatched counters)."""
+    corpus, index = setup
+    p = twolevel.fast().replace(chunk_tiles=2)
+    sh = shard_index(index, 1)
+    emu = shard_retrieve_batched(sh, *_q(corpus), p, traversal="chunked",
+                                 exchange_every=2)
+    msh = shard_retrieve_batched(sh, *_q(corpus), p, traversal="chunked",
+                                 exchange_every=2, mesh=make_shard_mesh(1))
+    np.testing.assert_array_equal(msh.ids, emu.ids)
+    np.testing.assert_array_equal(msh.scores, emu.scores)
+    np.testing.assert_array_equal(msh.stats["chunks_dispatched"],
+                                  emu.stats["chunks_dispatched"])
+
+
+def test_sharded_chunked_rejects_unknown_traversal(setup):
+    corpus, index = setup
+    with pytest.raises(ValueError, match="traversal"):
+        shard_retrieve_batched(shard_index(index, 2), *_q(corpus),
+                               twolevel.fast(), traversal="fused")
+
+
 def test_mesh_shard_count_mismatch_raises(setup):
     corpus, index = setup
     with pytest.raises(ValueError, match="shards"):
@@ -280,6 +332,12 @@ _MESH_PARITY_SCRIPT = textwrap.dedent("""
     # Pallas scorer under shard_map
     out["kernel"] = eq(
         shard_retrieve_batched(sh, *q, p, mesh=mesh, use_kernel=True), ref)
+    # chunked while_loop under shard_map == full impact scan per shard
+    pc = pf.replace(chunk_tiles=2)
+    out["chunked"] = eq(
+        shard_retrieve_batched(sh, *q, pc, mesh=mesh, traversal="chunked"),
+        shard_retrieve_batched(sh, *q, pc.replace(schedule="impact"),
+                               mesh=mesh))
     print("RESULT:" + json.dumps(out))
 """)
 

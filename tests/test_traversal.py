@@ -166,3 +166,149 @@ def test_kernel_path_matches_jnp_path(setup):
                              corpus.q_weights_l[:4], p, use_kernel=True)
     np.testing.assert_array_equal(r_jnp.ids, r_ker.ids)
     np.testing.assert_allclose(r_jnp.scores, r_ker.scores, rtol=1e-6)
+
+
+# -- chunked traversal: real skipping under jit -------------------------------
+
+PARITY_STATS = ("tiles_visited", "docs_present", "docs_survived",
+                "docs_frozen", "postings_touched")
+
+
+def _assert_identical(full, chunked):
+    np.testing.assert_array_equal(full.ids, chunked.ids)
+    np.testing.assert_array_equal(full.scores, chunked.scores)
+    for key in PARITY_STATS:
+        np.testing.assert_array_equal(full.stats[key], chunked.stats[key])
+
+
+def test_chunk_schedule_covers_all_tiles(setup):
+    """The chunk order is a permutation of all tiles (plus the sentinel
+    tail padding) with descending per-chunk max bounds."""
+    import jax.numpy as jnp
+    from repro.core.plan import chunk_schedule, plan_query
+    corpus, merged, index = setup
+    plan = plan_query(jnp.asarray(corpus.queries[0]),
+                      jnp.asarray(corpus.q_weights_b[0]),
+                      jnp.asarray(corpus.q_weights_l[0]),
+                      index.sigma_b, index.sigma_l, jnp.float32(1.0))
+    sched = chunk_schedule(plan, index.tile_max_b, index.tile_max_l,
+                           jnp.float32(1.0), index.n_tiles, 3)
+    chunks = np.asarray(sched.chunks)
+    assert chunks.shape == (-(-index.n_tiles // 3), 3)
+    real = chunks[chunks < index.n_tiles]
+    np.testing.assert_array_equal(np.sort(real), np.arange(index.n_tiles))
+    assert (chunks[chunks >= index.n_tiles] == index.n_tiles).all()
+    ub = np.asarray(sched.chunk_ub)
+    assert (np.diff(ub) <= 0).all()
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp", "pallas_kernel"])
+@pytest.mark.parametrize("preset", ["rank_safe", "guided"])
+def test_chunked_bit_identical_to_full_scan(setup, preset, use_kernel):
+    """traversal='chunked' visits the descending-bound order, so it must
+    be bit-identical — ids, scores, and every pruning stat — to the full
+    impact-schedule scan, for rank-safe and guided configs alike."""
+    corpus, merged, index = setup
+    p = (twolevel.original(gamma=0.2) if preset == "rank_safe"
+         else twolevel.fast()).replace(chunk_tiles=2)
+    full = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                            corpus.q_weights_l,
+                            p.replace(schedule="impact"),
+                            use_kernel=use_kernel)
+    ck = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, traversal="chunked",
+                          use_kernel=use_kernel)
+    _assert_identical(full, ck)
+    assert "chunks_dispatched" in ck.stats
+    assert (ck.stats["chunks_dispatched"] <= ck.stats["n_chunks"]).all()
+
+
+def test_chunked_early_exit_dispatches_fewer_chunks(small_corpus):
+    """On a guided config whose full scan skips tiles, the chunk loop must
+    stop early: strictly fewer chunks dispatched than n_chunks, while
+    results stay bit-identical to the full impact scan."""
+    corpus = small_corpus
+    index = build_index(corpus.merged("scaled"), tile_size=64)  # 32 tiles
+    p = twolevel.gti().replace(chunk_tiles=4)                   # 8 chunks
+    full = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                            corpus.q_weights_l,
+                            p.replace(schedule="impact"))
+    ck = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, traversal="chunked")
+    _assert_identical(full, ck)
+    # the full scan skips tiles here, so the chunk loop must exit early:
+    # strictly fewer chunks dispatched than the grid holds, in aggregate
+    # and for most queries (a query that never converges keeps its own
+    # count at n_chunks; the batch-level reduction is the contract)
+    assert (full.stats["tiles_visited"] < full.stats["n_tiles"]).any()
+    disp, n_chunks = ck.stats["chunks_dispatched"], ck.stats["n_chunks"]
+    assert disp.sum() < n_chunks.sum()
+    assert (disp < n_chunks).mean() > 0.5
+    # dispatched chunks at least cover the visited tiles
+    assert (disp * p.chunk_tiles >= ck.stats["tiles_visited"]).all()
+
+
+def test_chunked_fused_kernel_rank_safe_exact(setup):
+    """The multi-tile guided_score_chunk kernel scores with chunk-start
+    thresholds — for rank-safe configs that is still bound-exact, so the
+    top-k must match the full impact scan bit-for-bit."""
+    corpus, merged, index = setup
+    p = twolevel.original(gamma=0.2).replace(chunk_tiles=2)
+    full = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                            corpus.q_weights_l,
+                            p.replace(schedule="impact"))
+    fu = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, traversal="chunked_fused",
+                          use_kernel=True)
+    np.testing.assert_array_equal(full.ids, fu.ids)
+    np.testing.assert_allclose(full.scores, fu.scores, rtol=1e-6)
+
+
+def test_chunked_fused_guided_tolerance(small_corpus):
+    """Guided configs under the fused chunk kernel: chunk-start thresholds
+    shift the pruning trajectory (looser within a chunk, so the queues
+    tighten faster across chunks) — the usual guided tolerance. At the
+    default threshold_factor the trajectories coincide on this corpus
+    (pinned as a regression, like the sharded guided parity test); under
+    aggressive over-estimation heads must still agree almost everywhere."""
+    corpus = small_corpus
+    index = build_index(corpus.merged("scaled"), tile_size=64)
+    q = (corpus.queries, corpus.q_weights_b, corpus.q_weights_l)
+    p = twolevel.fast().replace(chunk_tiles=4)
+    ck = retrieve_batched(index, *q, p, traversal="chunked")
+    fu = retrieve_batched(index, *q, p, traversal="chunked_fused",
+                          use_kernel=True)
+    np.testing.assert_array_equal(ck.ids, fu.ids)
+    np.testing.assert_allclose(ck.scores, fu.scores, rtol=1e-5, atol=1e-4)
+
+    p_over = twolevel.fast(threshold_factor=1.5).replace(chunk_tiles=4)
+    ck = retrieve_batched(index, *q, p_over, traversal="chunked")
+    fu = retrieve_batched(index, *q, p_over, traversal="chunked_fused",
+                          use_kernel=True)
+    overlap = np.mean([len(set(a) & set(b)) / len(a)
+                       for a, b in zip(ck.ids, fu.ids)])
+    assert overlap > 0.9
+
+
+def test_chunked_rejects_unknown_traversal(setup):
+    corpus, merged, index = setup
+    with pytest.raises(ValueError, match="traversal"):
+        retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                         corpus.q_weights_l, twolevel.fast(),
+                         traversal="tiled")
+
+
+def test_chunk_tiles_argument_overrides_params(setup):
+    """The per-call chunk_tiles override changes the chunk grid but not
+    the results (both are the same descending-order traversal)."""
+    corpus, merged, index = setup
+    p = twolevel.fast()  # default chunk_tiles=8 -> 1 chunk on 8 tiles
+    r8 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, traversal="chunked")
+    r2 = retrieve_batched(index, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, traversal="chunked",
+                          chunk_tiles=2)
+    _assert_identical(r8, r2)
+    assert r8.stats["n_chunks"][0] == 1.0
+    assert r2.stats["n_chunks"][0] == 4.0
