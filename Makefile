@@ -4,7 +4,8 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow test-api test-traversal tier1 bench-smoke
+.PHONY: test test-fast test-slow test-api test-serve test-traversal tier1 \
+        bench-smoke
 
 test: test-fast test-slow
 
@@ -21,6 +22,12 @@ test-slow:
 test-api:
 	$(PYTEST) -m "not slow" tests/test_retrieval_api.py
 
+# Serving fast lane: the async scheduler / router / response-cache suite
+# plus the deprecated-server shim edges (the quickest signal when
+# touching serve/scheduler.py, serve/router.py, or serve/engine.py).
+test-serve:
+	$(PYTEST) -m "not slow" tests/test_scheduler.py tests/test_serve_edges.py
+
 # Traversal fast lane: the chunked/full/kernel parity + early-exit suite
 # (the quickest signal when touching core/plan, core/traversal, or the
 # guided_score kernels).
@@ -31,9 +38,12 @@ test-traversal:
 tier1:
 	$(PYTEST) -x
 
-# Seconds-scale CI benches: the sharded scaling smoke (1-device mesh) and
-# the retrieval perf baseline — writes BENCH_retrieval.json (mrt_ms,
-# tiles_visited, chunks_dispatched per method) for later PRs to diff.
+# Seconds-scale CI benches: the sharded scaling smoke (1-device mesh),
+# the retrieval perf baseline (BENCH_retrieval.json: mrt_ms,
+# tiles_visited, chunks_dispatched per method), and the Poisson-load
+# serving benchmark (BENCH_serving.json: QPS/MRT/P99 + cache-hit and
+# routing stats per policy) for later PRs to diff.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.sharded_scaling --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.retrieval_smoke
+	PYTHONPATH=src $(PY) -m benchmarks.serving_bench

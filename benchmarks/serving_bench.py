@@ -1,0 +1,139 @@
+"""Poisson-load serving benchmark for the async scheduler.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--out PATH]
+
+Drives a mixed-k (10/100), mixed-length (3/12-term) request stream
+through ``AsyncRetrievalScheduler`` under three serving policies and
+writes ``BENCH_serving.json`` (repo root by default):
+
+  - ``baseline``      one route, full-scan batched engine, no cache —
+                      the PR-3 ``RetrievalServer`` regime;
+  - ``routed``        Table-8 query-length routing (short queries ->
+                      fine-grained chunked traversal, long -> coarser
+                      chunks) — also groups micro-batches by length
+                      class, so a batch's while_loop trip count tracks
+                      its own class instead of the slowest mixed row;
+  - ``routed_cached`` the same policy plus the LRU response cache (the
+                      stream repeats queries, as real traffic does).
+
+Each config records QPS/MRT/P99 plus the scheduler's cache-hit and
+routing counters. Jit caches are warmed by a discarded scheduler with
+identical routes before timing, so MRT measures serving, not
+compilation. The corpus is tiny and seeded; numbers are stable enough
+to diff across PRs (``make bench-smoke`` is the CI entry).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core import build_index, twolevel
+from repro.data import make_corpus
+from repro.serve import (AsyncRetrievalScheduler, SchedulerConfig,
+                         mixed_request_stream, run_workload, single_route,
+                         table8_policy)
+
+try:  # package-relative when driven by benchmarks.run
+    from .common import emit
+except ImportError:  # python -m benchmarks.serving_bench
+    from benchmarks.common import emit
+
+N_DOCS = 4096
+N_TERMS = 1024
+N_QUERIES = 32
+TILE = 128
+SHORT_LEN = 3          # live terms of the "short" half of the stream
+N_REQUESTS = 160
+QPS = 100.0            # saturating: MRT reflects serving capacity, not queue noise
+MAX_WAIT_MS = 100.0    # long enough for micro-batches to actually form
+MAX_BATCH = 8
+K_POOL = (10, 100)     # two k-buckets in flight at once
+
+CONFIGS = (
+    ("baseline", lambda: single_route("batched"), 0),
+    ("routed", table8_policy, 0),
+    ("routed_cached", table8_policy, 256),
+)
+
+
+def _requests(corpus, n: int) -> list:
+    """The shared mixed stream (``serve.mixed_request_stream``): every
+    (length-class x k-bucket) group stays continuously populated."""
+    return mixed_request_stream(corpus, n, short_len=SHORT_LEN,
+                                k_pool=K_POOL)
+
+
+def collect() -> dict:
+    corpus = make_corpus("splade_like", n_docs=N_DOCS, n_terms=N_TERMS,
+                         n_queries=N_QUERIES, n_q_terms=12, seed=0)
+    index = build_index(corpus.merged("scaled"), tile_size=TILE)
+    params = twolevel.fast().replace(schedule="impact")
+    configs = {}
+    for name, routing, cache in CONFIGS:
+        def fresh():
+            return AsyncRetrievalScheduler(
+                index, params,
+                SchedulerConfig(max_batch=MAX_BATCH,
+                                max_wait_ms=MAX_WAIT_MS,
+                                cache_size=cache),
+                routing=routing())
+        # warm every (k-bucket x length-class) jit entry on a throwaway
+        # scheduler (the compile caches are global), then time fresh
+        run_workload(fresh(), _requests(corpus, 4 * MAX_BATCH), qps=1e6)
+        stats = run_workload(fresh(), _requests(corpus, N_REQUESTS),
+                             qps=QPS, seed=3)
+        configs[name] = {
+            "n": stats["n"], "qps_offered": QPS,
+            "qps_achieved": round(stats["qps_achieved"], 2),
+            "mrt_ms": round(stats["mrt_ms"], 3),
+            "p50_ms": round(stats["p50_ms"], 3),
+            "p99_ms": round(stats["p99_ms"], 3),
+            "batches": stats["batches"],
+            "cache_hits": stats["cache_hits"],
+            "cache_misses": stats["cache_misses"],
+            "requests_by_route": stats["requests_by_route"],
+            "batches_by_group": stats["batches_by_group"],
+        }
+    return {"meta": {"corpus": "splade_like", "n_docs": N_DOCS,
+                     "n_terms": N_TERMS, "n_queries": N_QUERIES,
+                     "tile_size": TILE, "n_requests": N_REQUESTS,
+                     "short_len": SHORT_LEN, "k_pool": list(K_POOL),
+                     "max_batch": MAX_BATCH,
+                     "p99_note": f"p99_ms over {N_REQUESTS} requests is a "
+                                 "true percentile (n >= 100)"},
+            "configs": configs}
+
+
+def run(out) -> None:
+    data = collect()
+    for name, row in data["configs"].items():
+        out(emit(f"serving/{name}", row["mrt_ms"],
+                 {k: v for k, v in row.items()
+                  if k not in ("mrt_ms", "requests_by_route",
+                               "batches_by_group")}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_serving.json)")
+    args = ap.parse_args()
+    path = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_serving.json")
+    data = collect()
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    base = data["configs"]["baseline"]["mrt_ms"]
+    for name, row in data["configs"].items():
+        hits = row["cache_hits"]
+        print(f"{name:14s} MRT={row['mrt_ms']:8.2f}ms "
+              f"P99={row['p99_ms']:8.2f}ms "
+              f"qps={row['qps_achieved']:6.1f} "
+              f"cache={hits}/{hits + row['cache_misses']} "
+              f"vs-baseline={row['mrt_ms'] / base:5.2f}x")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

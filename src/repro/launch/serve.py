@@ -1,14 +1,18 @@
-"""Serving launcher: batched 2GTI retrieval over a synthetic corpus.
+"""Serving launcher: the async scheduler over a synthetic corpus.
 
     PYTHONPATH=src python -m repro.launch.serve --preset splade_like
+    PYTHONPATH=src python -m repro.launch.serve --routing table8 --cache 256
     PYTHONPATH=src python -m repro.launch.serve --shards 4 --host-devices 4
     repro-serve --engine kernel --k 100        # installed console script
 
-``--engine`` picks any name from the ``repro.retrieval`` registry
-(``--shards N > 1`` implies ``sharded``): the server always goes through
-the ``Retriever`` facade. ``--shards N`` uses a one-axis mesh when N
-devices exist (``--host-devices`` fakes them on CPU), else the
-single-device vmap emulation path (bit-identical results).
+Requests go through ``repro.serve.AsyncRetrievalScheduler``: mixed-k
+micro-batches (``--k-mix`` draws per-request depths), query-length
+routing (``--routing table8``; ``--engine``/``--shards`` configure the
+single-route policy otherwise), and an LRU response cache (``--cache N``
+entries; the workload repeats queries, so hits show up immediately in
+the printed stats). ``--shards N`` uses a one-axis mesh when N devices
+exist (``--host-devices`` fakes them on CPU), else the single-device
+vmap emulation path (bit-identical results).
 
 Heavy imports live inside ``main`` so ``cli`` (the ``repro-serve`` entry
 point) can fix up ``XLA_FLAGS`` before jax initializes.
@@ -44,12 +48,14 @@ def _preparse_host_devices(argv=None) -> None:
 
 def main() -> None:
     import jax
+    import numpy as np
 
     from repro.core import build_index, twolevel
     from repro.data import make_corpus
-    from repro.retrieval import engine_names
-    from repro.serve import (Request, RetrievalServer, ServerConfig,
-                             ShardedRetrievalServer, make_shard_mesh)
+    from repro.retrieval import SearchRequest, engine_names
+    from repro.serve import (AsyncRetrievalScheduler, SchedulerConfig,
+                             make_shard_mesh, run_workload, single_route,
+                             table8_policy)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="splade_like")
@@ -59,9 +65,18 @@ def main() -> None:
     ap.add_argument("--beta", type=float, default=0.3)
     ap.add_argument("--k", type=int, default=10,
                     help="retrieval depth per request")
+    ap.add_argument("--k-mix", type=int, nargs="*", default=None,
+                    help="draw per-request depths from this set "
+                         "(mixed-k micro-batching), e.g. --k-mix 10 100")
     ap.add_argument("--engine", default="batched",
                     choices=sorted(set(engine_names()) - {"dense"}),
-                    help="retrieval engine (registry name)")
+                    help="retrieval engine for the single-route policy")
+    ap.add_argument("--routing", default="none",
+                    choices=("none", "table8"),
+                    help="query-length routing policy (Table 8)")
+    ap.add_argument("--cache", type=int, default=0,
+                    help="LRU response-cache entries (0 = off)")
+    ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--shards", type=int, default=1,
                     help="partition the index over N tile-range shards "
                          "(implies --engine sharded)")
@@ -74,23 +89,39 @@ def main() -> None:
                          n_queries=64)
     index = build_index(corpus.merged("scaled"), tile_size=1024)
     params = twolevel.fast(beta=args.beta).replace(schedule="impact")
+
     if args.shards > 1 or args.engine == "sharded":
+        if args.routing != "none":
+            ap.error("--shards/--engine sharded cannot combine with "
+                     "--routing (the sharded engine is a single route); "
+                     "drop one of the flags")
         mesh = (make_shard_mesh(args.shards)
                 if 1 < args.shards <= len(jax.devices()) else None)
-        srv = ShardedRetrievalServer(
-            index, params, ServerConfig(max_batch=16),
-            n_shards=args.shards, mesh=mesh,
-            exchange_every=args.exchange_every, k=args.k)
+        routing = single_route("sharded", n_shards=args.shards, mesh=mesh,
+                               exchange_every=args.exchange_every)
         path = "mesh" if mesh is not None else "emulated"
         print(f"# sharded serving: {args.shards} shards ({path})")
+    elif args.routing == "table8":
+        # --engine still matters under routing: it serves the long class
+        routing = table8_policy(long_engine=args.engine)
+        print(f"# routing: table8 (short -> fine chunks, "
+              f"long -> {args.engine})")
     else:
-        srv = RetrievalServer(index, params, ServerConfig(max_batch=16),
-                              engine=args.engine, k=args.k)
+        routing = single_route(args.engine)
         print(f"# serving engine: {args.engine}")
-    reqs = [Request(corpus.queries[i % 64], corpus.q_weights_b[i % 64],
-                    corpus.q_weights_l[i % 64])
+
+    sched = AsyncRetrievalScheduler(
+        index, params,
+        SchedulerConfig(max_batch=args.max_batch, cache_size=args.cache),
+        routing=routing)
+    rng = np.random.default_rng(0)
+    k_pool = args.k_mix if args.k_mix else [args.k]
+    reqs = [SearchRequest(terms=corpus.queries[i % 64],
+                          weights_b=corpus.q_weights_b[i % 64],
+                          weights_l=corpus.q_weights_l[i % 64],
+                          k=int(rng.choice(k_pool)))
             for i in range(args.requests)]
-    stats = srv.run_workload(reqs, qps=args.qps)
+    stats = run_workload(sched, reqs, qps=args.qps)
     print(stats)
 
 

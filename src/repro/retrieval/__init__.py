@@ -19,7 +19,7 @@ Legacy entry points (``core.traversal.retrieve_batched`` / ``_sequential``,
 retrieve_dense``) remain as thin bit-identical wrappers the engines call.
 """
 from .contract import (K_BUCKETS, SearchRequest, SearchResponse,  # noqa: F401
-                       bucket_k)
+                       bucket_k, resolve_ks)
 from .engines import (Engine, engine_names, get_engine,  # noqa: F401
                       register_engine)
 from .retriever import Retriever  # noqa: F401

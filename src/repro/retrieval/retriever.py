@@ -26,14 +26,28 @@ import time
 import numpy as np
 
 from ..core.twolevel import TwoLevelParams, resolve_k
-from .contract import K_BUCKETS, SearchRequest, SearchResponse, bucket_k
+from .contract import (K_BUCKETS, SearchRequest, SearchResponse, bucket_k,
+                       resolve_ks)
 from .engines import get_engine
+
+
+def _cast2d(a, dtype):
+    """``a`` unchanged when it is already a [., .] array of ``dtype`` —
+    np *and* jnp arrays both satisfy this without leaving their device —
+    else the cheapest dtype cast the array type provides."""
+    return a if a.dtype == dtype else a.astype(dtype)
 
 
 def _pad_queries(terms, weights_b, weights_l):
     """Rectangularize a query batch. [B, Nq] arrays pass through; ragged
     per-query sequences are padded with zero-weight terms (score no-ops,
     the same convention the serving batcher has always used)."""
+    if all(getattr(a, "ndim", None) == 2
+           for a in (terms, weights_b, weights_l)):
+        # already-rectangular np/jnp batch: no per-row copy loop, and jnp
+        # arrays stay on device (no host round-trip through np.asarray)
+        return (_cast2d(terms, np.int32), _cast2d(weights_b, np.float32),
+                _cast2d(weights_l, np.float32))
     try:
         arr = np.asarray(terms)
     except ValueError:  # ragged: numpy refuses inhomogeneous shapes
@@ -87,14 +101,20 @@ class Retriever:
 
     def search(self, request: SearchRequest | None = None, *,
                terms=None, weights_b=None, weights_l=None, dense=None,
-               k: int | None = None,
+               k=None,
                threshold_factor: float | None = None) -> SearchResponse:
         """Execute one request (a SearchRequest, or its fields as kwargs).
 
         ``k`` falls back to the request default (DEFAULT_K, honoring a
         legacy ``TwoLevelParams(k=...)`` stash). ids/scores come back
         truncated to the requested ``k`` even when the engine executed at
-        a larger bucket."""
+        a larger bucket.
+
+        ``k`` may also be a per-query [B] sequence (mixed-k batch): the
+        engine runs *once* at the bucket of the largest entry and each
+        row is truncated back to its own depth — slots beyond a row's k
+        hold the empty-queue sentinels (id -1, score -inf), and
+        ``SearchResponse.ks`` records the per-row depths."""
         if request is None:
             request = SearchRequest(
                 terms=terms, weights_b=weights_b, weights_l=weights_l,
@@ -103,7 +123,11 @@ class Retriever:
                                          dense, k, threshold_factor)):
             raise TypeError("pass either a SearchRequest or field kwargs, "
                             "not both")
-        k_req = resolve_k(self.params, request.k)
+        ks = resolve_ks(request.k, request.batch_size())
+        if ks is None:
+            k_req = resolve_k(self.params, request.k)
+        else:
+            k_req = int(ks.max())
         k_exec = bucket_k(k_req, self.k_buckets)
         params = self.params
         if request.threshold_factor is not None:
@@ -120,9 +144,18 @@ class Retriever:
         res = self.engine.search(q_terms, qw_b, qw_l, request.dense,
                                  k=k_exec, params=params)
         latency_ms = (time.perf_counter() - t0) * 1e3
+        ids = np.asarray(res.ids)[:, :k_req]
+        scores = np.asarray(res.scores)[:, :k_req]
+        if ks is None:
+            ks = np.full(ids.shape[0], k_req, np.int32)
+        elif (ks < k_req).any():
+            # mixed-k batch: mask each row beyond its own requested depth
+            # with the engines' empty-queue sentinels
+            dead = np.arange(k_req)[None, :] >= ks[:, None]
+            ids = np.where(dead, np.int32(-1), ids)
+            scores = np.where(dead, np.float32(-np.inf), scores)
         return SearchResponse(
-            ids=np.asarray(res.ids)[:, :k_req],
-            scores=np.asarray(res.scores)[:, :k_req],
+            ids=ids, scores=scores,
             engine=self.engine_name, k=k_req, k_exec=k_exec,
             stats=res.stats, latency_ms=latency_ms,
-            latencies_ms=res.latencies_ms)
+            latencies_ms=res.latencies_ms, ks=ks)

@@ -1,25 +1,29 @@
-"""Batched retrieval serving engine with latency accounting.
+"""DEPRECATED synchronous serving facade over the v2 scheduler.
 
-Requests accumulate into batches (max size / max wait); each batch goes
-through the unified ``repro.retrieval.Retriever`` facade once — the server
-is engine-agnostic: ``engine="batched"`` (default), ``"kernel"``, or
-``"sharded"`` (see ``ShardedRetrievalServer``) all serve through the same
-queue/batch machinery. Per-request latency = enqueue -> results, so the
-MRT/P99 numbers include batching delay — the metric regime of the paper's
-tables, extended to a served setting. A synchronous simulator
-(``run_workload``) drives it with a Poisson arrival process for benchmarks
-on this single-core container.
+``RetrievalServer`` (and ``ShardedRetrievalServer`` in ``serve.sharded``)
+predate :class:`repro.serve.scheduler.AsyncRetrievalScheduler`; they are
+kept as thin shims so existing call sites keep returning the exact same
+ids/scores, but new code should submit ``SearchRequest`` objects to the
+scheduler directly (futures, mixed-k micro-batching, query-length
+routing, response cache). The shim pins the legacy behavior: one engine
+for every request, no routing, no cache, and the historical
+``Request``/``run_workload`` latency accounting.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
+import warnings
 
 import numpy as np
 
 from ..core.index import BlockedImpactIndex
 from ..core.twolevel import TwoLevelParams, resolve_k
-from ..retrieval import Retriever
+from ..retrieval import SearchRequest
+from .router import single_route
+from .scheduler import (AsyncRetrievalScheduler, SchedulerConfig,
+                        aggregate_latencies, truncate_terms)
 
 
 @dataclasses.dataclass
@@ -41,58 +45,75 @@ class Request:
 
     @property
     def latency_ms(self) -> float:
+        """Enqueue -> results in ms; NaN while the request is in flight
+        (``t_done`` unset) instead of a garbage negative number."""
+        if not self.t_done:
+            return math.nan
         return (self.t_done - self.t_enqueue) * 1e3
 
 
 class RetrievalServer:
+    """Deprecated: a synchronous queue over one engine. Use
+    ``AsyncRetrievalScheduler`` (see the module docstring)."""
+
     def __init__(self, index: BlockedImpactIndex, params: TwoLevelParams,
                  cfg: ServerConfig | None = None, *,
                  engine: str = "batched", k: int | None = None,
                  **engine_opts):
+        warnings.warn(
+            "RetrievalServer is deprecated: use repro.serve."
+            "AsyncRetrievalScheduler (submit(SearchRequest) -> "
+            "SearchHandle) for mixed-k micro-batching, query-length "
+            "routing and response caching.",
+            DeprecationWarning, stacklevel=2)
         self.index = index
         self.params = params
         # None -> fresh per-instance config (a shared default instance would
         # leak max_batch/pad_terms mutations across servers)
         self.cfg = cfg if cfg is not None else ServerConfig()
-        self.retriever = Retriever.open(index, params, engine=engine,
-                                        **engine_opts)
+        self.scheduler = AsyncRetrievalScheduler(
+            index, params, self._sched_cfg(),
+            routing=single_route(engine, **engine_opts))
+        # legacy attribute: the one retriever every batch goes through
+        self.retriever = self.scheduler._retriever("all")
         self.k = resolve_k(params, k)
         self.pending: list[Request] = []
         self.completed: list[Request] = []
+
+    def _sched_cfg(self) -> SchedulerConfig:
+        """Scheduler view of the (mutable) legacy config. The pinned
+        behaviors: no cache, and no batch padding — the shim serves the
+        exact row count the old server did."""
+        return SchedulerConfig(max_batch=self.cfg.max_batch,
+                               max_wait_ms=self.cfg.max_wait_ms,
+                               pad_terms=self.cfg.pad_terms,
+                               pad_batch=False, cache_size=0)
 
     def submit(self, req: Request, now: float) -> None:
         req.t_enqueue = now
         self.pending.append(req)
 
     def _truncate(self, r: Request) -> np.ndarray:
-        """Indices of the ``pad_terms`` terms to keep. Over-long queries
-        drop their *lowest-impact* terms — ranked by the gamma-combined
-        query weight the engine scores with — not the trailing ones."""
-        if len(r.terms) <= self.cfg.pad_terms:
-            return np.arange(len(r.terms))
-        g = self.params.gamma
-        impact = g * np.asarray(r.qw_b) + (1.0 - g) * np.asarray(r.qw_l)
-        keep = np.argsort(-impact, kind="stable")[:self.cfg.pad_terms]
-        return np.sort(keep)  # preserve original term order
+        """Indices of the ``pad_terms`` terms to keep (see
+        ``scheduler.truncate_terms``)."""
+        return truncate_terms(r.terms, r.qw_b, r.qw_l, self.cfg.pad_terms,
+                              self.params.gamma)
 
     def _flush(self) -> None:
         batch, self.pending = (self.pending[:self.cfg.max_batch],
                                self.pending[self.cfg.max_batch:])
-        n, p = len(batch), self.cfg.pad_terms
-        terms = np.zeros((n, p), np.int32)
-        qw_b = np.zeros((n, p), np.float32)
-        qw_l = np.zeros((n, p), np.float32)
-        for i, r in enumerate(batch):
-            keep = self._truncate(r)
-            k = len(keep)
-            terms[i, :k] = np.asarray(r.terms)[keep]
-            qw_b[i, :k] = np.asarray(r.qw_b)[keep]
-            qw_l[i, :k] = np.asarray(r.qw_l)[keep]
-        res = self.retriever.search(terms=terms, weights_b=qw_b,
-                                    weights_l=qw_l, k=self.k)
-        done = time.perf_counter()
-        for i, r in enumerate(batch):
-            r.ids, r.scores, r.t_done = res.ids[i], res.scores[i], done
+        # legacy config objects are mutated in place by callers; re-sync
+        self.scheduler.cfg = self._sched_cfg()
+        handles = [
+            self.scheduler.submit(
+                SearchRequest(terms=r.terms, weights_b=r.qw_b,
+                              weights_l=r.qw_l, k=self.k),
+                now=r.t_enqueue)
+            for r in batch]
+        self.scheduler.flush()
+        for r, h in zip(batch, handles):
+            resp = h.result()
+            r.ids, r.scores, r.t_done = resp.ids[0], resp.scores[0], h.t_done
         self.completed.extend(batch)
 
     def run_workload(self, requests: list[Request], qps: float,
@@ -119,8 +140,5 @@ class RetrievalServer:
                 self._flush()
             elif not self.pending and i < len(requests):
                 time.sleep(max(0.0, arrivals[i] - now))
-        lat = np.array([r.latency_ms for r in self.completed])
-        return {"n": len(lat), "mrt_ms": float(lat.mean()),
-                "p50_ms": float(np.percentile(lat, 50)),
-                "p99_ms": float(np.percentile(lat, 99)),
-                "qps_achieved": len(lat) / (time.perf_counter() - t0)}
+        return aggregate_latencies([r.latency_ms for r in self.completed],
+                                   time.perf_counter() - t0)

@@ -1,0 +1,676 @@
+"""Async serving scheduler: futures, mixed-k micro-batches, routing, cache.
+
+The v2 serving seam. ``submit(SearchRequest) -> SearchHandle`` admits a
+request into a priority queue and returns immediately; a handle is a
+future (``.done()`` / ``.result(timeout)``) that resolves to a
+:class:`repro.retrieval.SearchResponse`. Requests are grouped into
+micro-batches by **(k-bucket x query-length class)** — the two
+per-request decisions the paper makes matter (Section 4's depth/quality
+tradeoff; Table 8's length-dependent engine preference) — and each
+group dispatches under the usual serving deadlines (``max_batch`` rows
+or the oldest request's ``max_wait_ms``). One ``Retriever.search`` call
+serves the whole batch with **per-request k**: the engine executes once
+at the group's bucket and every row is truncated back to its own depth.
+
+Compile discipline: every dispatched batch is padded to a static
+``[max_batch, width]`` shape (``pad_batch=True``), where ``width`` is
+the route's ``pad_terms`` (or the scheduler default) — so the jitted
+traversal compiles **at most once per (k-bucket x length-class)** and
+the fill level of a batch never retraces. Padding rows are zero-weight
+queries: they score as no-ops, never extend the chunked while_loop past
+the real rows, and are sliced off before results surface. A short
+route's narrow width is where length routing pays on the batched
+engines: the planner/gather cost scales with the padded query width.
+
+Query-length routing (``serve.router``): a declarative
+:class:`RoutingPolicy` maps live-term counts to engine configurations
+(Table 8: short queries -> finer ``chunk_tiles``; long -> coarser
+chunks or the fused kernel). One ``Retriever`` is opened per route,
+lazily.
+
+Response cache: an LRU keyed on ``(query fingerprint, policy hash,
+k-bucket, per-row depths)``. A hit completes the handle at submit time
+— the zero-service-time path — and hit/miss counters surface in
+``stats()``. Keying on the exact depths lets the same query coexist at
+several k within one bucket, and means a hit is always the exact
+request replayed (within a bucket, different depths are different
+truncations of the same execution for rank-safe configs, but guided
+configs are only reproducible at the exact request — the cache never
+approximates). Entries and delivered responses never share arrays.
+
+Two drive modes:
+
+  - synchronous: ``poll()`` dispatches every *due* micro-batch inline
+    and ``flush()`` drains everything — deterministic, what the
+    benchmarks, the deprecated ``RetrievalServer`` shim, and most tests
+    use;
+  - threaded: ``start()`` (or ``with scheduler:``) runs a background
+    worker that wakes on submissions and deadlines; ``result()`` then
+    blocks like any future. ``close()`` stops the worker and drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+import itertools
+import math
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from ..core.twolevel import TwoLevelParams, resolve_k
+from ..retrieval import (K_BUCKETS, Retriever, SearchRequest,
+                         SearchResponse, bucket_k, resolve_ks)
+from .router import RoutingPolicy, query_length, single_route
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 32        # rows per micro-batch (and the padded shape)
+    max_wait_ms: float = 2.0   # oldest-request dispatch deadline
+    pad_terms: int = 16        # static query width (overlong rows truncate)
+    # pad every batch to [max_batch, pad_terms] so a (k-bucket x class)
+    # group compiles exactly once regardless of fill level
+    pad_batch: bool = True
+    cache_size: int = 256      # LRU response-cache entries; 0 disables
+
+
+def truncate_terms(terms, qw_b, qw_l, pad_terms: int,
+                   gamma: float) -> np.ndarray:
+    """Indices of the ``pad_terms`` terms to keep for one over-long
+    query: drop the *lowest-impact* terms — ranked by the gamma-combined
+    query weight the engine scores with — not the trailing ones, and
+    preserve the original term order among the kept."""
+    if len(terms) <= pad_terms:
+        return np.arange(len(terms))
+    impact = (gamma * np.asarray(qw_b, np.float32)
+              + (1.0 - gamma) * np.asarray(qw_l, np.float32))
+    keep = np.argsort(-impact, kind="stable")[:pad_terms]
+    return np.sort(keep)
+
+
+class SearchHandle:
+    """Future-style result of one :meth:`AsyncRetrievalScheduler.submit`.
+
+    ``done()`` is non-blocking; ``result(timeout=None)`` blocks until
+    the response exists (with a worker thread running this is a plain
+    future wait; without one it flushes the scheduler so a bare
+    submit->result round trip can never deadlock). ``cached`` marks the
+    zero-service-time path; ``latency_ms`` is submit->completion and
+    NaN while the request is still in flight.
+    """
+
+    __slots__ = ("route", "k_bucket", "priority", "cached", "t_submit",
+                 "t_done", "_event", "_response", "_exception",
+                 "_scheduler")
+
+    def __init__(self, scheduler, route: str, k_bucket: int,
+                 priority: int, t_submit: float):
+        self.route = route
+        self.k_bucket = k_bucket
+        self.priority = priority
+        self.cached = False
+        self.t_submit = t_submit
+        self.t_done = math.nan
+        self._event = threading.Event()
+        self._response: SearchResponse | None = None
+        self._exception: BaseException | None = None
+        self._scheduler = scheduler
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> SearchResponse:
+        if not self._event.is_set() and not self._scheduler.is_running():
+            # drain to completion: an *unrelated* batch failing mid-flush
+            # already resolved its own handles with the error, but ours
+            # may still be queued behind it — keep flushing (each failed
+            # batch is popped, so this terminates) instead of letting the
+            # foreign exception escape or a timeout=None wait deadlock
+            while not self._event.is_set():
+                try:
+                    self._scheduler.flush()
+                    break
+                except Exception:
+                    continue
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request not served within {timeout}s (route "
+                f"{self.route!r}, k-bucket {self.k_bucket})")
+        if self._exception is not None:
+            raise self._exception
+        return self._response
+
+    @property
+    def latency_ms(self) -> float:
+        """Submit -> completion in ms; NaN while in flight."""
+        if not self._event.is_set():
+            return math.nan
+        return (self.t_done - self.t_submit) * 1e3
+
+    def _complete(self, response: SearchResponse, t_done: float,
+                  cached: bool = False) -> None:
+        self._response = response
+        self.t_done = t_done
+        self.cached = cached
+        self._event.set()
+
+    def _fail(self, exc: BaseException, t_done: float) -> None:
+        """Deliver a batch-execution failure: ``result()`` re-raises.
+        The request is gone either way, but the caller finds out instead
+        of blocking forever on a handle nothing will ever complete."""
+        self._exception = exc
+        self.t_done = t_done
+        self._event.set()
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admitted request, normalized to static-width rows."""
+    seq: int
+    priority: int
+    deadline: float            # absolute perf_counter dispatch deadline
+    handle: SearchHandle
+    terms: np.ndarray          # [r, pad_terms] int32
+    qw_b: np.ndarray           # [r, pad_terms] f32
+    qw_l: np.ndarray           # [r, pad_terms] f32
+    ks: np.ndarray             # [r] int32 per-row depth
+    cache_key: tuple | None
+
+    def __lt__(self, other):   # heap order: priority, then admission
+        return (self.priority, self.seq) < (other.priority, other.seq)
+
+    @property
+    def rows(self) -> int:
+        return self.terms.shape[0]
+
+
+class AsyncRetrievalScheduler:
+    """The v2 serving loop: priority admission, (k-bucket x length-class)
+    micro-batching, per-request k, query-length routing, response cache.
+
+    One instance owns one index + pruning policy and a lazily-opened
+    ``Retriever`` per route. See the module docstring for semantics.
+    """
+
+    def __init__(self, index, params: TwoLevelParams | None = None,
+                 cfg: SchedulerConfig | None = None, *,
+                 routing: RoutingPolicy | None = None,
+                 k_buckets=K_BUCKETS):
+        self.index = index
+        self.params = params if params is not None else TwoLevelParams()
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
+        self.routing = routing if routing is not None else single_route()
+        self.k_buckets = k_buckets
+        self._policy_fp = self.routing.fingerprint(self.params)
+        self._retrievers: dict[str, Retriever] = {}
+        # (bucket, route_name, threshold_factor) -> heap of _Pending
+        self._groups: dict[tuple, list] = {}
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._open_lock = threading.Lock()   # lazy Retriever.open guard
+        self._thread: threading.Thread | None = None
+        self._stop = False
+        self._cache: OrderedDict = OrderedDict()
+        self._counts = {"submitted": 0, "completed": 0, "failed": 0,
+                        "batches": 0, "cache_hits": 0, "cache_misses": 0,
+                        "rows_executed": 0, "rows_padding": 0}
+        self._route_requests: dict[str, int] = {}
+        self._group_batches: dict[str, int] = {}
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, request: SearchRequest | None = None, *,
+               terms=None, weights_b=None, weights_l=None, k=None,
+               threshold_factor: float | None = None,
+               priority: int = 0, now: float | None = None) -> SearchHandle:
+        """Admit one request; returns its future immediately.
+
+        ``priority`` orders dispatch within a micro-batch group (lower =
+        sooner; FIFO within a priority). ``now`` overrides the admission
+        timestamp (perf_counter scale) for simulated workloads. A
+        response-cache hit completes the handle before returning.
+        """
+        if request is None:
+            request = SearchRequest(terms=terms, weights_b=weights_b,
+                                    weights_l=weights_l, k=k,
+                                    threshold_factor=threshold_factor)
+        elif any(v is not None for v in (terms, weights_b, weights_l, k,
+                                         threshold_factor)):
+            raise TypeError("pass either a SearchRequest or field kwargs, "
+                            "not both")
+        if request.dense is not None:
+            raise ValueError("the scheduler serves sparse engines; use a "
+                             "Retriever(engine='dense') directly for dense "
+                             "requests")
+        now = time.perf_counter() if now is None else now
+        rows, qlen = self._normalize_rows(request)
+        if not rows:
+            raise ValueError("request carries a zero-row query batch")
+        if len(rows) > self.cfg.max_batch:
+            # an oversized atomic request would dispatch at its own row
+            # count, re-tracing the jitted traversal per distinct size —
+            # split it client-side instead of breaking compile discipline
+            raise ValueError(
+                f"request has {len(rows)} rows > max_batch="
+                f"{self.cfg.max_batch}; split it into <= max_batch-row "
+                f"requests (each request rides one micro-batch)")
+        route = self.routing.classify(qlen)
+        width = (route.pad_terms if route.pad_terms is not None
+                 else self.cfg.pad_terms)
+        q_terms, qw_b, qw_l = self._pad_rows(rows, width)
+        ks = resolve_ks(request.k, q_terms.shape[0])
+        if ks is None:
+            ks = np.full(q_terms.shape[0],
+                         resolve_k(self.params, request.k), np.int32)
+        bucket = bucket_k(int(ks.max()), self.k_buckets)
+        tf = (None if request.threshold_factor is None
+              else float(request.threshold_factor))
+        handle = SearchHandle(self, route.name, bucket, priority, now)
+        key = None
+        if self.cfg.cache_size > 0:
+            # per-row depths are part of the key, so the same query at
+            # different k within one bucket keeps separate entries
+            # instead of thrashing a single slot
+            key = (self._fingerprint(q_terms, qw_b, qw_l, tf),
+                   self._policy_fp, bucket, ks.tobytes())
+        with self._cond:
+            self._counts["submitted"] += 1
+            self._route_requests[route.name] = (
+                self._route_requests.get(route.name, 0) + 1)
+            if key is not None:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    self._cache.move_to_end(key)
+                    self._counts["cache_hits"] += 1
+                    self._counts["completed"] += 1
+                    handle._complete(self._detach(hit, latency_ms=0.0),
+                                     t_done=now, cached=True)
+                    return handle
+                self._counts["cache_misses"] += 1
+            entry = _Pending(
+                seq=next(self._seq), priority=priority,
+                deadline=now + self.cfg.max_wait_ms / 1e3, handle=handle,
+                terms=q_terms, qw_b=qw_b, qw_l=qw_l, ks=ks, cache_key=key)
+            heapq.heappush(
+                self._groups.setdefault((bucket, route.name, tf), []),
+                entry)
+            self._cond.notify_all()
+        return handle
+
+    def _normalize_rows(self, request: SearchRequest):
+        """Split a request into per-query (terms, qw_b, qw_l) rows — a
+        single flat query becomes one row — and report its live-term
+        count (max over rows), which picks the route *before* any
+        padding or truncation happens."""
+        terms, qw_b, qw_l = request.terms, request.weights_b, request.weights_l
+        if terms is None:
+            raise ValueError("scheduler requests need sparse terms/weights")
+        nd = getattr(terms, "ndim", None)
+        flat = (nd == 1 if nd is not None
+                # plain sequence: flat iff empty or scalar first element
+                else len(terms) == 0 or np.ndim(terms[0]) == 0)
+        if flat:
+            # one query — including the 0-term edge, which pads to an
+            # all-zero-weight no-op row (the historical server behavior)
+            terms, qw_b, qw_l = [terms], [qw_b], [qw_l]
+        rows = [(np.asarray(terms[i]),
+                 np.asarray(qw_b[i], np.float32),
+                 np.asarray(qw_l[i], np.float32))
+                for i in range(len(terms))]
+        qlen = max((query_length(wb, wl) for _, wb, wl in rows), default=0)
+        return rows, qlen
+
+    def _pad_rows(self, rows, width: int):
+        """Static [r, width] row block: over-long rows keep their
+        highest-impact terms (``truncate_terms``), short rows pad with
+        zero-weight no-ops. ``width`` is the route's ``pad_terms`` (or
+        the scheduler default), so a short length class executes at a
+        narrow compiled shape."""
+        r = len(rows)
+        out_t = np.zeros((r, width), np.int32)
+        out_b = np.zeros((r, width), np.float32)
+        out_l = np.zeros((r, width), np.float32)
+        for i, (t, wb, wl) in enumerate(rows):
+            keep = truncate_terms(t, wb, wl, width, self.params.gamma)
+            n = len(keep)
+            out_t[i, :n] = t[keep]
+            out_b[i, :n] = wb[keep]
+            out_l[i, :n] = wl[keep]
+        return out_t, out_b, out_l
+
+    @staticmethod
+    def _fingerprint(terms, qw_b, qw_l, tf) -> bytes:
+        h = hashlib.sha1()
+        for a in (terms, qw_b, qw_l):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(repr(tf).encode())
+        return h.digest()
+
+    def _retriever(self, route_name: str) -> Retriever:
+        retr = self._retrievers.get(route_name)
+        if retr is None:
+            # double-checked under the route lock: a worker poll and a
+            # main-thread flush racing here must not open (and for the
+            # sharded engine, partition) the same route twice
+            with self._open_lock:
+                retr = self._retrievers.get(route_name)
+                if retr is None:
+                    route = self.routing.by_name(route_name)
+                    retr = Retriever.open(self.index, self.params,
+                                          engine=route.engine,
+                                          k_buckets=self.k_buckets,
+                                          **route.opts())
+                    self._retrievers[route_name] = retr
+        return retr
+
+    # -- dispatch ------------------------------------------------------------
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return sum(len(g) for g in self._groups.values())
+
+    def next_deadline(self) -> float | None:
+        """Earliest dispatch deadline among pending requests (absolute
+        perf_counter time), or None when the queue is idle."""
+        with self._lock:
+            deadlines = [e.deadline for g in self._groups.values()
+                         for e in g]
+        return min(deadlines) if deadlines else None
+
+    def poll(self, now: float | None = None, force: bool = False) -> int:
+        """Dispatch every *due* micro-batch inline; returns the number of
+        requests completed. A group is due when it can fill ``max_batch``
+        rows or its oldest deadline has passed (``force`` dispatches
+        everything — that is ``flush``)."""
+        completed = 0
+        while True:
+            picked = self._pick_batch(
+                time.perf_counter() if now is None else now, force)
+            if picked is None:
+                return completed
+            completed += self._execute(*picked)
+
+    def flush(self) -> int:
+        """Drain: dispatch every pending request regardless of deadlines."""
+        return self.poll(force=True)
+
+    def _pick_batch(self, now: float, force: bool):
+        """Pop one due micro-batch (whole requests, up to ``max_batch``
+        rows) under the lock; execution happens outside it."""
+        with self._lock:
+            due_key = None
+            due_deadline = math.inf
+            for key, group in self._groups.items():
+                if not group:
+                    continue
+                rows = sum(e.rows for e in group)
+                oldest = min(e.deadline for e in group)
+                if force or rows >= self.cfg.max_batch or oldest <= now:
+                    if oldest < due_deadline:
+                        due_key, due_deadline = key, oldest
+            if due_key is None:
+                return None
+            group = self._groups[due_key]
+            batch, rows = [], 0
+            while group and (not batch
+                             or rows + group[0].rows <= self.cfg.max_batch):
+                e = heapq.heappop(group)
+                batch.append(e)
+                rows += e.rows
+            if not group:
+                del self._groups[due_key]
+            return due_key, batch
+
+    def _execute(self, key: tuple, batch: list) -> int:
+        try:
+            return self._execute_inner(key, batch)
+        except Exception as exc:
+            # the entries were already popped from their group — deliver
+            # the failure to every handle so no caller blocks forever,
+            # then re-raise (sync callers see it; the worker survives it)
+            t_done = time.perf_counter()
+            with self._cond:
+                self._counts["failed"] = (
+                    self._counts.get("failed", 0) + len(batch))
+                for e in batch:
+                    e.handle._fail(exc, t_done)
+            raise
+
+    def _execute_inner(self, key: tuple, batch: list) -> int:
+        bucket, route_name, tf = key
+        retr = self._retriever(route_name)
+        terms = np.concatenate([e.terms for e in batch])
+        qw_b = np.concatenate([e.qw_b for e in batch])
+        qw_l = np.concatenate([e.qw_l for e in batch])
+        ks = np.concatenate([e.ks for e in batch])
+        n_real = terms.shape[0]
+        n_pad = 0
+        if self.cfg.pad_batch and n_real < self.cfg.max_batch:
+            # zero-weight no-op rows: static [max_batch, pad_terms] shape
+            # -> one compile per (k-bucket x length-class), any fill level
+            n_pad = self.cfg.max_batch - n_real
+            terms = np.concatenate(
+                [terms, np.zeros((n_pad, terms.shape[1]), np.int32)])
+            qw_b = np.concatenate(
+                [qw_b, np.zeros((n_pad, qw_b.shape[1]), np.float32)])
+            qw_l = np.concatenate(
+                [qw_l, np.zeros((n_pad, qw_l.shape[1]), np.float32)])
+            ks = np.concatenate([ks, np.ones(n_pad, np.int32)])
+        resp = retr.search(terms=terms, weights_b=qw_b, weights_l=qw_l,
+                           k=ks, threshold_factor=tf)
+        t_done = time.perf_counter()
+        row0 = 0
+        with self._cond:
+            self._counts["batches"] += 1
+            self._counts["rows_executed"] += n_real
+            self._counts["rows_padding"] += n_pad
+            gname = f"k{bucket}/{route_name}"
+            self._group_batches[gname] = self._group_batches.get(gname, 0) + 1
+            for e in batch:
+                rows = slice(row0, row0 + e.rows)
+                row0 += e.rows
+                k_e = int(e.ks.max())
+                # materialized copies, not views: a view would pin the
+                # whole padded batch alive for the cache's lifetime, and
+                # a consumer mutating its response would corrupt the
+                # shared cache entry
+                sliced = SearchResponse(
+                    ids=resp.ids[rows, :k_e].copy(),
+                    scores=resp.scores[rows, :k_e].copy(),
+                    engine=resp.engine, k=k_e, k_exec=resp.k_exec,
+                    stats=self._slice_stats(resp.stats, rows, terms.shape[0]),
+                    latency_ms=resp.latency_ms, ks=e.ks)
+                if e.cache_key is not None:
+                    self._cache[e.cache_key] = self._detach(sliced)
+                    self._cache.move_to_end(e.cache_key)
+                    while len(self._cache) > self.cfg.cache_size:
+                        self._cache.popitem(last=False)
+                self._counts["completed"] += 1
+                e.handle._complete(sliced, t_done=t_done)
+        return len(batch)
+
+    @staticmethod
+    def _detach(resp: SearchResponse, **overrides) -> SearchResponse:
+        """A response whose arrays (ids, scores, ks, per-query stats)
+        are private copies. The cache entry and every delivered response
+        must never alias: a consumer mutating its response would
+        otherwise rewrite what later hits are served."""
+        return dataclasses.replace(
+            resp, ids=resp.ids.copy(), scores=resp.scores.copy(),
+            ks=resp.ks.copy(),
+            stats={n: v.copy() if isinstance(v, np.ndarray) else v
+                   for n, v in resp.stats.items()},
+            **overrides)
+
+    @staticmethod
+    def _slice_stats(stats: dict, rows: slice, batch_rows: int) -> dict:
+        """Per-query counter arrays slice to the request's rows; scalar
+        counters pass through unchanged."""
+        out = {}
+        for name, v in stats.items():
+            arr = np.asarray(v)
+            out[name] = (arr[rows].copy()
+                         if arr.ndim >= 1 and arr.shape[0] == batch_rows
+                         else v)
+        return out
+
+    # -- stats / cache -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters: submissions, batches, cache hits/misses,
+        per-route request counts and per-(bucket x class) batch counts."""
+        with self._lock:
+            return {**self._counts, "cache_entries": len(self._cache),
+                    "pending": sum(len(g) for g in self._groups.values()),
+                    "requests_by_route": dict(self._route_requests),
+                    "batches_by_group": dict(self._group_batches)}
+
+    def cache_clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+
+    # -- threaded mode -------------------------------------------------------
+
+    def is_running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "AsyncRetrievalScheduler":
+        """Run the background dispatch worker (idempotent)."""
+        if self.is_running():
+            return self
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._worker, name="retrieval-scheduler", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self, flush: bool = True) -> None:
+        """Stop the worker; by default drain whatever is still queued."""
+        if self._thread is not None:
+            with self._cond:
+                self._stop = True
+                self._cond.notify_all()
+            self._thread.join()
+            self._thread = None
+        if flush:
+            self.flush()
+
+    def __enter__(self) -> "AsyncRetrievalScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                if self._stop:
+                    return
+                deadlines = [min(e.deadline for e in g)
+                             for g in self._groups.values() if g]
+                full = any(sum(e.rows for e in g) >= self.cfg.max_batch
+                           for g in self._groups.values())
+                if not deadlines:
+                    self._cond.wait(timeout=0.1)
+                    continue
+                wait = min(deadlines) - time.perf_counter()
+                if not full and wait > 0:
+                    self._cond.wait(timeout=min(wait, 0.05))
+                    continue
+            try:
+                self.poll()
+            except Exception:
+                # the failing batch's handles were already failed by
+                # _execute; the worker must keep serving everyone else
+                pass
+
+
+def aggregate_latencies(latencies_ms, wall_s: float) -> dict:
+    """MRT/P50/P99/QPS over a served workload's per-request latencies —
+    the single copy of the serving latency accounting (the scheduler's
+    ``run_workload`` and the deprecated server shim both use it). NaN
+    entries (in-flight requests) are dropped and zero-service cache
+    completions clamp at 0, so neither poisons the aggregates."""
+    lat = np.asarray(latencies_ms, np.float64)
+    lat = np.clip(lat[np.isfinite(lat)], 0.0, None)
+    if lat.size == 0:
+        return {"n": 0, "mrt_ms": math.nan, "p50_ms": math.nan,
+                "p99_ms": math.nan, "qps_achieved": 0.0}
+    return {"n": int(lat.size), "mrt_ms": float(lat.mean()),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "qps_achieved": lat.size / wall_s}
+
+
+def mixed_request_stream(corpus, n: int, *, short_len: int = 3,
+                         k_pool=(10, 100),
+                         query_pool: int | None = None) -> list:
+    """Deterministic real-traffic-shaped demo stream over a synthetic
+    corpus: alternate short (``short_len``-term) and full-length rows,
+    cycle ``k`` through ``k_pool`` (mixed k-buckets in flight), and
+    cycle a ``query_pool``-sized query subset so queries repeat — the
+    access pattern the response cache exists for. The single copy the
+    serving example and ``benchmarks/serving_bench.py`` both drive, so
+    their numbers describe the same workload."""
+    qn = min(query_pool or len(corpus.queries), len(corpus.queries))
+    reqs = []
+    for i in range(n):
+        qi = i % qn
+        qlen = short_len if i % 2 == 0 else corpus.queries.shape[1]
+        reqs.append(SearchRequest(
+            terms=corpus.queries[qi, :qlen],
+            weights_b=corpus.q_weights_b[qi, :qlen],
+            weights_l=corpus.q_weights_l[qi, :qlen],
+            k=k_pool[(i // 2) % len(k_pool)]))
+    return reqs
+
+
+def run_workload(scheduler: AsyncRetrievalScheduler,
+                 requests: list, qps: float, seed: int = 0,
+                 priorities=None) -> dict:
+    """Open-loop Poisson driver: submit ``requests`` (SearchRequests) at
+    exponential inter-arrival times and poll the scheduler inline —
+    single-host synchronous serving, the regime the paper's MRT/P99
+    tables use. Latency is admission -> completion per handle, so it
+    includes batching delay; cache hits complete with zero service time
+    and are clamped at 0 (never negative, never NaN, never dropped).
+    Returns latency aggregates plus ``scheduler.stats()``.
+    """
+    if not requests:
+        return {"n": 0, "mrt_ms": math.nan, "p50_ms": math.nan,
+                "p99_ms": math.nan, "qps_achieved": 0.0,
+                **scheduler.stats()}
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, len(requests)))
+    t0 = time.perf_counter()
+    handles = []
+    i, n = 0, len(requests)
+    while i < n or scheduler.pending_count():
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            pr = 0 if priorities is None else int(priorities[i])
+            handles.append(scheduler.submit(requests[i], priority=pr,
+                                            now=t0 + arrivals[i]))
+            i += 1
+        # a failing batch resolves its own handles (and is popped from
+        # its group, so draining terminates); one bad route must not
+        # abort the measurement for every other request
+        try:
+            progressed = (scheduler.flush() if i >= n
+                          else scheduler.poll())
+        except Exception:
+            continue
+        if i < n and not progressed:
+            nxt = t0 + arrivals[i]
+            dl = scheduler.next_deadline()
+            if dl is not None:
+                nxt = min(nxt, dl)
+            time.sleep(max(0.0, nxt - time.perf_counter()))
+    wall = time.perf_counter() - t0
+    served = [h.latency_ms for h in handles if h._exception is None]
+    return {**aggregate_latencies(served, wall), **scheduler.stats()}

@@ -471,7 +471,10 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
 
 
 class ShardedRetrievalServer(RetrievalServer):
-    """RetrievalServer whose batch executor is the mesh-sharded engine.
+    """Deprecated (with :class:`RetrievalServer`): the same shim over
+    ``AsyncRetrievalScheduler``, pinned to the mesh-sharded engine. New
+    code opens a scheduler with a routing policy whose routes use
+    ``engine="sharded"`` (``route(..., engine="sharded", n_shards=N)``).
 
     Accepts the same queue/batching config; the index is partitioned once
     at construction (inside the ``"sharded"`` registry engine).

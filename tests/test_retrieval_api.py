@@ -316,6 +316,80 @@ def test_custom_buckets_are_sorted(setup):
     assert r.search(**_q(corpus), k=5).k_exec == 10
 
 
+# -- per-request k within one batch (mixed-k) ---------------------------------
+
+MIXED_KS = [5, 10, 100]
+
+
+@pytest.mark.parametrize("engine", ["batched", "kernel", "sharded"])
+def test_mixed_k_batch_matches_per_k_calls(setup, engine):
+    """One batch with k in {5, 10, 100} executes once at the batch-max
+    bucket and each row's prefix is bit-identical to a separate call at
+    that row's own k (rank-safe: the exact top-k is prefix-closed across
+    buckets); slots beyond a row's depth hold the empty sentinels."""
+    corpus, index = setup
+    params = twolevel.original(gamma=0.2)
+    opts = {"n_shards": 2} if engine == "sharded" else {}
+    r = Retriever.open(index, params, engine=engine, **opts)
+    n = len(MIXED_KS)
+    batch = dict(terms=corpus.queries[:n],
+                 weights_b=corpus.q_weights_b[:n],
+                 weights_l=corpus.q_weights_l[:n])
+    resp = r.search(**batch, k=MIXED_KS)
+    assert resp.k == 100 and resp.k_exec == 100
+    np.testing.assert_array_equal(resp.ks, MIXED_KS)
+    assert resp.ids.shape == resp.scores.shape == (n, 100)
+    for i, ki in enumerate(MIXED_KS):
+        single = r.search(terms=corpus.queries[i:i + 1],
+                          weights_b=corpus.q_weights_b[i:i + 1],
+                          weights_l=corpus.q_weights_l[i:i + 1], k=ki)
+        np.testing.assert_array_equal(resp.ids[i, :ki], single.ids[0],
+                                      err_msg=f"{engine} row {i}")
+        np.testing.assert_array_equal(resp.scores[i, :ki], single.scores[0],
+                                      err_msg=f"{engine} row {i}")
+        assert (resp.ids[i, ki:] == -1).all()
+        assert np.isneginf(resp.scores[i, ki:]).all()
+
+
+def test_mixed_k_within_bucket_does_not_recompile(setup):
+    """Sweeping the per-row k mix inside one bucket must hit the jit
+    cache; raising the batch-max into a new bucket adds exactly one
+    entry."""
+    from repro.core.traversal import _retrieve_batched_impl
+    corpus, _ = setup
+    # fresh tile_size -> unique static shapes -> cold jit-cache rows
+    index = build_index(corpus.merged("scaled"), tile_size=32)
+    r = Retriever.open(index, twolevel.fast())
+    batch = dict(terms=corpus.queries[:3],
+                 weights_b=corpus.q_weights_b[:3],
+                 weights_l=corpus.q_weights_l[:3])
+    r.search(**batch, k=[5, 9, 10])        # compiles the 10-bucket
+    n0 = _retrieve_batched_impl._cache_size()
+    r.search(**batch, k=[7, 8, 10])        # same bucket: cache hit
+    r.search(**batch, k=10)                # scalar k, same bucket
+    assert _retrieve_batched_impl._cache_size() == n0
+    r.search(**batch, k=[5, 10, 42])       # batch max 42 -> 100-bucket
+    assert _retrieve_batched_impl._cache_size() == n0 + 1
+    r.search(**batch, k=[100, 5, 10])      # still the 100-bucket
+    assert _retrieve_batched_impl._cache_size() == n0 + 1
+
+
+def test_mixed_k_validation(setup):
+    corpus, index = setup
+    r = Retriever.open(index, twolevel.fast())
+    q3 = dict(terms=corpus.queries[:3],
+              weights_b=corpus.q_weights_b[:3],
+              weights_l=corpus.q_weights_l[:3])
+    with pytest.raises(ValueError, match="3 queries"):
+        r.search(**q3, k=[5, 10])
+    with pytest.raises(ValueError, match=">= 1"):
+        r.search(**q3, k=[5, 0, 10])
+    with pytest.raises(ValueError, match="whole numbers"):
+        r.search(**q3, k=[5.5, 10, 100])
+    # exact float depths are fine (a computed k often arrives as float)
+    assert r.search(**q3, k=[5.0, 10.0, 10.0]).ks.tolist() == [5, 10, 10]
+
+
 # -- TwoLevelParams.k deprecation shim ----------------------------------------
 
 def test_legacy_k_warns_and_still_works(setup):
