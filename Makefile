@@ -4,8 +4,8 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow test-api test-serve test-traversal tier1 \
-        bench-smoke
+.PHONY: test test-fast test-slow test-api test-serve test-traversal \
+        test-quality tier1 bench-smoke
 
 test: test-fast test-slow
 
@@ -34,16 +34,27 @@ test-serve:
 test-traversal:
 	$(PYTEST) -m "not slow" tests/test_traversal.py tests/test_kernels.py
 
+# Relevance lane: metric properties, the eval harness (graded corpora,
+# TREC round-trip, the small-k guided-degradation regression), and the
+# hybrid cascade/rrf engine suite — the quickest signal when touching
+# core/metrics.py, repro/eval/, or retrieval/hybrid.py.
+test-quality:
+	$(PYTEST) -m "not slow" tests/test_metrics.py tests/test_eval_harness.py \
+	    tests/test_hybrid_engines.py
+
 # The exact tier-1 command from ROADMAP.md (everything, fail-fast).
 tier1:
 	$(PYTEST) -x
 
 # Seconds-scale CI benches: the sharded scaling smoke (1-device mesh),
 # the retrieval perf baseline (BENCH_retrieval.json: mrt_ms,
-# tiles_visited, chunks_dispatched per method), and the Poisson-load
+# tiles_visited, chunks_dispatched per method), the Poisson-load
 # serving benchmark (BENCH_serving.json: QPS/MRT/P99 + cache-hit and
-# routing stats per policy) for later PRs to diff.
+# routing stats per policy), and the relevance grid (BENCH_quality.json:
+# MRR/nDCG/recall next to MRT per method x threshold_factor x engine)
+# for later PRs to diff.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.sharded_scaling --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.retrieval_smoke
 	PYTHONPATH=src $(PY) -m benchmarks.serving_bench
+	PYTHONPATH=src $(PY) -m benchmarks.quality_bench

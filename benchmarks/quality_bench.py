@@ -1,0 +1,130 @@
+"""Relevance-vs-latency grid: the committed quality baseline.
+
+    PYTHONPATH=src python -m benchmarks.quality_bench [--out PATH]
+
+Writes ``BENCH_quality.json`` (repo root by default): for each pruning
+method x threshold_factor x engine lane, MRR@10 / nDCG@10 /
+Recall@{10,100} next to the warmed MRT — the paper's quality/efficiency
+tradeoff in one table. The corpus is the seeded graded-qrels corpus of
+``repro.eval.synthetic`` (contested by construction: one prunable
+relevant doc per query, dense signal inside the noise tail), so the
+numbers are deterministic and diffable across PRs.
+
+What the committed baseline demonstrates:
+
+- ``tf=3.0`` (over-estimated thresholds) degrades guided ``gti`` MRR@10
+  visibly below the rank-safe lane at k=10 — the paper's small-k
+  misalignment failure;
+- ``cascade`` MRR@10 sits strictly above the sparse-only lane under
+  every (method, tf), and above the dense-only lane: reranking ~100
+  sparse candidates with the exact dense score beats either modality
+  alone;
+- the hybrid lanes pay for it in MRT (a second stage is not free) —
+  which is exactly the tradeoff a deployment sweep needs to see.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import twolevel
+from repro.eval import build_hybrid, evaluate_retriever, make_graded_corpus
+from repro.eval.harness import evaluate_ranking
+from repro.retrieval import Retriever
+from repro.retrieval.hybrid import dense_topk, embed_queries
+
+try:  # package-relative when driven by benchmarks.run
+    from .common import emit
+except ImportError:  # python -m benchmarks.quality_bench
+    from benchmarks.common import emit
+
+N_DOCS = 4096
+N_TERMS = 1024
+N_QUERIES = 32
+DIM = 32
+TILE = 128
+K = 10          # headline retrieval depth (rankings evaluated to 100)
+DEPTH = 100     # hybrid candidate depth k'
+
+METHODS = (
+    ("rank_safe", lambda: twolevel.linear_combination(gamma=0.05)),
+    ("gti", twolevel.gti),
+    ("2gti_fast", twolevel.fast),
+)
+THRESHOLD_FACTORS = (1.0, 3.0)
+ENGINES = (("sparse", "batched", {}),
+           ("cascade", "cascade", {"depth": DEPTH}),
+           ("rrf", "rrf", {"depth": DEPTH}))
+
+
+def collect(smoke: bool = False) -> dict:
+    n_queries = 8 if smoke else N_QUERIES
+    graded = make_graded_corpus(n_docs=N_DOCS, n_terms=N_TERMS,
+                                n_queries=n_queries, dim=DIM, seed=0)
+    hybrid = build_hybrid(graded, tile_size=TILE)
+    queries = graded.queries()
+    lanes = {}
+    for mname, preset in METHODS:
+        params = preset()
+        for tf in THRESHOLD_FACTORS:
+            for ename, engine, opts in ENGINES:
+                r = Retriever.open(hybrid, params, engine=engine, **opts)
+                row = evaluate_retriever(r, queries, graded.qrels, k=DEPTH,
+                                         threshold_factor=tf,
+                                         repeats=1 if smoke else 3)
+                # the headline small-k view: the same engine asked for
+                # k=10 only (bucketed execution at 10 — what a serving
+                # deployment returning ten results actually runs)
+                resp = r.search(k=K, threshold_factor=tf, **queries)
+                row["mrr@10_at_k10"] = evaluate_ranking(
+                    resp.ids, graded.qrels)["mrr@10"]
+                lanes[f"{mname}/tf{tf}/{ename}"] = row
+    # dense-only reference lane: exact top-k over the whole embedding
+    # table through the same query bridge (no traversal, no pruning)
+    q_rot = embed_queries(hybrid, queries["terms"], queries["weights_l"])
+    _, dense_ids = dense_topk(hybrid, q_rot, k=DEPTH)
+    lanes["dense_only"] = dict(
+        evaluate_ranking(np.asarray(dense_ids), graded.qrels),
+        engine="dense_topk", k=DEPTH, n_queries=n_queries)
+    return {"meta": {"corpus": "splade_like+graded", "n_docs": N_DOCS,
+                     "n_terms": N_TERMS, "n_queries": n_queries,
+                     "dim": DIM, "tile_size": TILE, "k_headline": K,
+                     "depth": DEPTH, "seed": 0,
+                     "threshold_factors": list(THRESHOLD_FACTORS),
+                     "mrt_note": "mrt_ms is warmed per-query mean over "
+                                 "the batched path; hybrid lanes include "
+                                 "their second stage"},
+            "lanes": lanes}
+
+
+def run(out) -> None:
+    data = collect(smoke=True)
+    for name, row in data["lanes"].items():
+        out(emit(f"quality_bench/{name}", row.get("mrt_ms", float("nan")),
+                 {m: row[m] for m in ("mrr@10", "ndcg@10", "recall@10",
+                                      "recall@100") if m in row}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_quality.json)")
+    args = ap.parse_args()
+    path = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_quality.json")
+    data = collect()
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    for name, row in sorted(data["lanes"].items()):
+        print(f"{name}: mrr@10={row['mrr@10']:.3f} "
+              f"ndcg@10={row['ndcg@10']:.3f} "
+              f"r@100={row['recall@100']:.3f} "
+              f"mrt={row.get('mrt_ms', float('nan')):.2f}ms")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,17 @@
-"""Relevance metrics used in the paper: MRR@k, recall@k, nDCG@10."""
+"""Relevance metrics used in the paper: MRR@k, recall@k, nDCG@k.
+
+Contract details the eval harness (``repro.eval``) and its property
+tests pin down:
+
+- a document counts **once**: duplicate ids in a ranked list never
+  inflate recall or DCG (first occurrence wins — the TREC convention);
+- sentinel / invalid ids (< 0, the engines' empty-queue marker) are
+  never relevant and never consume a "seen" slot;
+- ``k`` larger than the ranked list degrades gracefully;
+- ``mean_and_p99`` ignores non-finite latencies (in-flight NaN markers)
+  and returns (nan, nan) for an empty or all-NaN sample instead of
+  raising.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -6,7 +19,7 @@ import numpy as np
 
 def mrr_at_k(ranked_ids: np.ndarray, relevant: set[int], k: int = 10) -> float:
     for rank, d in enumerate(ranked_ids[:k], start=1):
-        if int(d) in relevant:
+        if int(d) >= 0 and int(d) in relevant:
             return 1.0 / rank
     return 0.0
 
@@ -14,16 +27,22 @@ def mrr_at_k(ranked_ids: np.ndarray, relevant: set[int], k: int = 10) -> float:
 def recall_at_k(ranked_ids: np.ndarray, relevant: set[int], k: int) -> float:
     if not relevant:
         return 0.0
-    hits = sum(1 for d in ranked_ids[:k] if int(d) in relevant)
-    return hits / len(relevant)
+    hits = {int(d) for d in ranked_ids[:k]
+            if int(d) >= 0 and int(d) in relevant}
+    return len(hits) / len(relevant)
 
 
 def ndcg_at_k(ranked_ids: np.ndarray, gains: dict[int, float], k: int = 10
               ) -> float:
     """nDCG@k with graded gains (binary dict -> standard nDCG)."""
     dcg = 0.0
+    seen: set[int] = set()
     for rank, d in enumerate(ranked_ids[:k], start=1):
-        g = gains.get(int(d), 0.0)
+        d = int(d)
+        if d < 0 or d in seen:
+            continue   # sentinels never score; dups never earn gain twice
+        seen.add(d)
+        g = gains.get(d, 0.0)
         if g:
             dcg += (2.0 ** g - 1.0) / np.log2(rank + 1)
     ideal = sorted(gains.values(), reverse=True)[:k]
@@ -33,8 +52,15 @@ def ndcg_at_k(ranked_ids: np.ndarray, gains: dict[int, float], k: int = 10
 
 
 def mean_and_p99(latencies_ms: np.ndarray) -> tuple[float, float]:
-    """MRT and tail latency as reported in the paper's tables."""
-    lat = np.asarray(latencies_ms, dtype=np.float64)
+    """MRT and tail latency as reported in the paper's tables.
+
+    Non-finite entries (NaN in-flight markers, inf) are dropped; an
+    empty or fully non-finite sample yields (nan, nan) rather than a
+    numpy error, so callers can aggregate partial workloads safely."""
+    lat = np.asarray(latencies_ms, dtype=np.float64).ravel()
+    lat = lat[np.isfinite(lat)]
+    if lat.size == 0:
+        return (float("nan"), float("nan"))
     return float(lat.mean()), float(np.percentile(lat, 99))
 
 

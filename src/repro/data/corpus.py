@@ -11,6 +11,13 @@ generated data whose knobs mirror the real-model regimes:
   weights on query terms are boosted; in misaligned regimes a share of that
   boost lands on expansion-only postings — exactly the mass BM25-guided
   pruning cannot see, which is what degrades GTI at small k.
+- graded relevance (``n_rel_partial > 0``): a second tier of *partially*
+  relevant docs is planted with roughly half the learned boost — grade 1
+  next to the fully-relevant grade 2 — so graded metrics (nDCG) are
+  non-degenerate. ``qrels`` stays the binary top-grade set (backward
+  compatible); ``qrels_graded`` carries docid -> gain per query. With the
+  default ``n_rel_partial=0`` the generator's rng draw sequence is
+  unchanged, so seeded corpora are bit-identical to pre-graded builds.
 
 Three presets mirror the paper's models: ``splade_like``, ``unicoil_like``,
 ``deepimpact_like``.
@@ -36,7 +43,14 @@ class SyntheticCorpus:
     queries: np.ndarray        # [Q, Nq] int32 term ids (padded with 0)
     q_weights_l: np.ndarray    # [Q, Nq] f32 learned query weights (0 = pad)
     q_weights_b: np.ndarray    # [Q, Nq] f32 BM25 query weights (0 = pad)
-    qrels: list[set[int]]      # relevant docids per query
+    qrels: list[set[int]]      # fully-relevant docids per query (binary)
+    # graded judgments: docid -> gain (2.0 = relevant, 1.0 = partial);
+    # equals {d: 2.0 for d in qrels[qi]} when n_rel_partial == 0
+    qrels_graded: list[dict[int, float]] | None = None
+    # the BM25-strong / learned-just-below distractors planted per query
+    # (the docs inaccurate guidance promotes; the eval harness gives them
+    # confusable dense signal so no single modality is trivially perfect)
+    q_distractors: list[set[int]] | None = None
 
     def merged(self, fill: str = "scaled"):
         return merge_models(self.learned, self.bm25, fill,
@@ -54,7 +68,14 @@ PRESETS = {
 def make_corpus(preset: str = "splade_like", n_docs: int = 8192,
                 n_terms: int = 2048, n_queries: int = 64, n_q_terms: int = 6,
                 n_rel: int = 4, avg_doc_terms: int = 48,
-                seed: int = 0) -> SyntheticCorpus:
+                seed: int = 0, n_rel_partial: int = 0,
+                rel_boost_scale: float = 1.0) -> SyntheticCorpus:
+    """``rel_boost_scale`` multiplies the planted relevant/partial learned
+    boosts (distractors are untouched): < 1 pushes the relevant band down
+    into the distractor band, making the ranking genuinely contested —
+    the regime the relevance harness needs. A pure multiply on already-
+    drawn values, so the default (1.0) is bit-identical to older builds
+    and any scale leaves the rng draw sequence unchanged."""
     if preset not in PRESETS:
         raise ValueError(f"unknown preset {preset!r}; options {list(PRESETS)}")
     expansion_rate, weight_noise, rel_on_exp = PRESETS[preset]
@@ -93,15 +114,23 @@ def make_corpus(preset: str = "splade_like", n_docs: int = 8192,
     band = np.arange(n_terms // 64, n_terms // 2)
     queries = np.zeros((n_queries, n_q_terms), dtype=np.int32)
     qrels: list[set[int]] = []
+    qrels_graded: list[dict[int, float]] = []
+    q_distractors: list[set[int]] = []
     boost_t, boost_d, boost_w = [], [], []   # learned-side boosts
     add_t, add_d, add_tf = [], [], []        # BM25-side tf boosts
     n_distract = 24
     for qi in range(n_queries):
         qt = rng.choice(band, size=n_q_terms, replace=False).astype(np.int32)
         queries[qi] = qt
-        pool = rng.choice(n_docs, size=n_rel + n_distract, replace=False)
-        rel, distract = pool[:n_rel], pool[n_rel:]
+        pool = rng.choice(n_docs, size=n_rel + n_rel_partial + n_distract,
+                          replace=False)
+        rel = pool[:n_rel]
+        partial = pool[n_rel:n_rel + n_rel_partial]
+        distract = pool[n_rel + n_rel_partial:]
         qrels.append(set(int(d) for d in rel))
+        qrels_graded.append({**{int(d): 2.0 for d in rel},
+                             **{int(d): 1.0 for d in partial}})
+        q_distractors.append(set(int(d) for d in distract))
         for d in rel:
             # Relevant docs: strong learned weights on all query terms, but
             # only (1 - rel_on_exp) of the terms are BM25-visible, weakly.
@@ -112,11 +141,29 @@ def make_corpus(preset: str = "splade_like", n_docs: int = 8192,
             for t, vis in zip(qt, visible):
                 boost_t.append(int(t))
                 boost_d.append(int(d))
-                boost_w.append(float(rng.gamma(4.0, 1.0) + 4.0))
+                boost_w.append(rel_boost_scale
+                               * float(rng.gamma(4.0, 1.0) + 4.0))
                 if vis:
                     add_t.append(int(t))
                     add_d.append(int(d))
                     add_tf.append(int(rng.integers(1, 4)))
+        for d in partial:
+            # Partial tier (grade 1): roughly half the relevant boost on
+            # the same visibility pattern. Lands between the relevant band
+            # and the distractor band so graded metrics have real ordering
+            # to measure. Draws happen only when n_rel_partial > 0, so the
+            # default rng sequence is untouched.
+            visible = rng.random(n_q_terms) > rel_on_exp
+            visible[rng.integers(0, n_q_terms)] = True
+            for t, vis in zip(qt, visible):
+                boost_t.append(int(t))
+                boost_d.append(int(d))
+                boost_w.append(rel_boost_scale
+                               * float(rng.gamma(3.0, 0.9) + 2.0))
+                if vis:
+                    add_t.append(int(t))
+                    add_d.append(int(d))
+                    add_tf.append(int(rng.integers(1, 3)))
         for d in distract:
             # Hard distractors: strong BM25 (high tf on most query terms),
             # learned scores just below the relevant band. These fill the
@@ -152,4 +199,6 @@ def make_corpus(preset: str = "splade_like", n_docs: int = 8192,
     qw_b = np.ones_like(qw_l)
     return SyntheticCorpus(n_docs=n_docs, n_terms=n_terms, bm25=bm25,
                            bm25_stats=stats, learned=learned, queries=queries,
-                           q_weights_l=qw_l, q_weights_b=qw_b, qrels=qrels)
+                           q_weights_l=qw_l, q_weights_b=qw_b, qrels=qrels,
+                           qrels_graded=qrels_graded,
+                           q_distractors=q_distractors)

@@ -8,8 +8,12 @@ one seam those sweeps (and every serving/scaling layer) go through:
     per-call ``k`` and ``threshold_factor``; ``K_BUCKETS`` static-shape
     depth buckets;
   - :mod:`engines` — the ``Engine`` protocol and string-keyed registry
-    (``batched`` / ``kernel`` / ``sequential`` / ``sharded`` / ``dense``),
-    all driven by the single ``core.plan`` planner;
+    (``batched`` / ``kernel`` / ``sequential`` / ``sharded`` / ``dense``
+    plus the hybrid ``cascade`` / ``rrf``), all sparse engines driven by
+    the single ``core.plan`` planner;
+  - :mod:`hybrid` — the sparse+dense substrate (``HybridIndex``,
+    ``build_hybrid_index``, query embedding bridge, jitted dense rerank,
+    ``rrf_fuse``) the hybrid engines run on;
   - :mod:`retriever` — the ``Retriever`` facade
     (``Retriever.open(index, params, engine=...)`` → ``.search(...)``)
     handling padding, k-bucketing, and engine dispatch.
@@ -22,4 +26,7 @@ from .contract import (K_BUCKETS, SearchRequest, SearchResponse,  # noqa: F401
                        bucket_k, resolve_ks)
 from .engines import (Engine, engine_names, get_engine,  # noqa: F401
                       register_engine)
+from .hybrid import (HybridIndex, build_hybrid_index,  # noqa: F401
+                     dense_topk, embed_queries, rerank_candidates,
+                     rrf_fuse)
 from .retriever import Retriever  # noqa: F401

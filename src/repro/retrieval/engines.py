@@ -11,6 +11,15 @@ an *executor/placement*, never a different pruning algorithm:
     "sequential"  host tile loop, physical skips + timings    1 device
     "sharded"     shard_map tile ranges + collective merge    mesh
     "dense"       blocked dense two-level pruning             1 device
+    "cascade"     sparse traversal at depth k' -> dense rerank to k
+    "rrf"         reciprocal-rank fusion of sparse + dense rankings
+
+The hybrid engines (``cascade`` / ``rrf``) open on a
+:class:`~repro.retrieval.hybrid.HybridIndex` (sparse BII + dense doc
+embeddings + query projection); every *sparse* engine also accepts a
+HybridIndex and transparently serves its ``.sparse`` side, so one
+scheduler index can back a routing policy that mixes sparse and hybrid
+routes.
 
 Third-party backends register with ``@register_engine("name")`` — the
 class must accept ``(index, params, **opts)`` and implement ``search``.
@@ -26,6 +35,9 @@ from ..core.index import BlockedImpactIndex
 from ..core.traversal import (RetrievalResult, retrieve_batched,
                               retrieve_sequential)
 from ..core.twolevel import TwoLevelParams
+from .contract import K_BUCKETS, bucket_k
+from .hybrid import (HybridIndex, dense_topk, embed_queries,
+                     rerank_candidates, rrf_fuse)
 
 _REGISTRY: dict[str, type] = {}
 
@@ -64,9 +76,20 @@ class Engine(Protocol):
 
 
 def _require_bii(index, engine: str) -> BlockedImpactIndex:
+    if isinstance(index, HybridIndex):
+        index = index.sparse   # sparse engines serve the sparse side
     if not isinstance(index, BlockedImpactIndex):
         raise TypeError(f"engine {engine!r} needs a BlockedImpactIndex, "
                         f"got {type(index).__name__}")
+    return index
+
+
+def _require_hybrid(index, engine: str) -> HybridIndex:
+    if not isinstance(index, HybridIndex):
+        raise TypeError(
+            f"engine {engine!r} needs a HybridIndex (sparse BII + dense "
+            f"doc embeddings; see repro.retrieval.build_hybrid_index), "
+            f"got {type(index).__name__}")
     return index
 
 
@@ -185,6 +208,8 @@ class DenseEngine:
     overrides are ignored — the dense skip test has no factor knob."""
 
     def __init__(self, index, params: TwoLevelParams):
+        if isinstance(index, HybridIndex):
+            index = index.dense   # dense-only lane of a hybrid index
         if not isinstance(index, DenseGuidedIndex):
             raise TypeError(f"engine 'dense' needs a DenseGuidedIndex "
                             f"(core.dense_guided.build_dense_index), got "
@@ -209,3 +234,100 @@ class DenseEngine:
         scores = np.stack(scores).astype(np.float32)
         return RetrievalResult(ids=ids, scores=scores, global_ids=ids,
                                local_ids=ids, stats=stats)
+
+
+_HYBRID_FIRST_STAGES = ("batched", "kernel", "sequential", "sharded")
+
+
+class _HybridBase:
+    """Shared open-time plumbing of the two hybrid engines: a HybridIndex,
+    a sparse first stage from the registry, and a candidate depth k'.
+
+    ``depth`` (k') is bucketed at call time together with the requested
+    k, so the jitted stages compile once per (k'-bucket, k-bucket) pair
+    — a per-call k sweep never retraces either stage. Extra ``**opts``
+    go to the first-stage constructor (``traversal="chunked"``,
+    ``n_shards=...``, ...)."""
+
+    def __init__(self, index, params: TwoLevelParams, *,
+                 depth: int = 100, first_stage: str = "batched", **opts):
+        self.hybrid = _require_hybrid(index, self.name)
+        if first_stage not in _HYBRID_FIRST_STAGES:
+            raise ValueError(
+                f"engine {self.name!r} first_stage must be in "
+                f"{_HYBRID_FIRST_STAGES}, got {first_stage!r}")
+        if depth < 1:
+            raise ValueError(f"depth={depth} must be >= 1")
+        self.depth = int(depth)
+        self.first = get_engine(first_stage)(self.hybrid.sparse, params,
+                                             **opts)
+
+    def _depth_for(self, k: int) -> int:
+        """Candidate depth of one call: at least the configured k' and
+        the requested k, bucketed (and corpus-capped) so the static
+        stage shapes stay on the compile grid."""
+        return min(bucket_k(max(self.depth, k), K_BUCKETS),
+                   self.hybrid.n_docs)
+
+
+@register_engine("cascade")
+class CascadeEngine(_HybridBase):
+    """Sparse guided traversal at depth k', exact-dense rerank to k.
+
+    Stage one is any sparse registry engine on the shared planner (the
+    pruning policy — including per-call ``threshold_factor`` overrides —
+    applies there); stage two gathers the k' candidates' embedding rows
+    through the hybrid index and takes the exact dense top-k (jitted,
+    ``hybrid.rerank_candidates``). Query embeddings come from
+    ``SearchRequest.dense`` when provided, else from the sparse query
+    via the index's ``q_proj`` bridge — so the engine serves plain
+    sparse requests end-to-end (scheduler routing included). Scores in
+    the response are *dense* scores, not RankScores."""
+
+    def search(self, terms, weights_b, weights_l, dense, *, k, params):
+        k1 = self._depth_for(k)
+        res = self.first.search(terms, weights_b, weights_l, None,
+                                k=k1, params=params)
+        q_rot = embed_queries(self.hybrid, terms, weights_l, dense=dense)
+        scores, ids = rerank_candidates(self.hybrid, q_rot,
+                                        np.asarray(res.ids), k=k)
+        stats = dict(res.stats)
+        stats["cascade_depth"] = float(k1)
+        return RetrievalResult(ids=ids, scores=scores, global_ids=ids,
+                               local_ids=ids, stats=stats,
+                               latencies_ms=res.latencies_ms)
+
+
+@register_engine("rrf")
+class RRFEngine(_HybridBase):
+    """Reciprocal-rank fusion of the sparse and dense rankings.
+
+    Both legs rank to depth k' (sparse: first-stage traversal under the
+    pruning policy; dense: batched exact top-k' over the embedding
+    table), then fuse with ``score(d) = sum 1/(rrf_k + rank_d)`` and
+    keep the top k. Response scores are RRF scores — comparable within
+    a response, not across engines."""
+
+    def __init__(self, index, params: TwoLevelParams, *,
+                 depth: int = 100, rrf_k: float = 60.0,
+                 first_stage: str = "batched", **opts):
+        super().__init__(index, params, depth=depth,
+                         first_stage=first_stage, **opts)
+        if rrf_k <= 0:
+            raise ValueError(f"rrf_k={rrf_k} must be > 0")
+        self.rrf_k = float(rrf_k)
+
+    def search(self, terms, weights_b, weights_l, dense, *, k, params):
+        k1 = self._depth_for(k)
+        res = self.first.search(terms, weights_b, weights_l, None,
+                                k=k1, params=params)
+        q_rot = embed_queries(self.hybrid, terms, weights_l, dense=dense)
+        _, dense_ids = dense_topk(self.hybrid, q_rot, k=k1)
+        ids, scores = rrf_fuse(np.asarray(res.ids), dense_ids, k=k,
+                               rrf_k=self.rrf_k)
+        stats = dict(res.stats)
+        stats["fusion_depth"] = float(k1)
+        stats["rrf_k"] = self.rrf_k
+        return RetrievalResult(ids=ids, scores=scores, global_ids=ids,
+                               local_ids=ids, stats=stats,
+                               latencies_ms=res.latencies_ms)

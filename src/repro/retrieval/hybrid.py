@@ -1,0 +1,197 @@
+"""Hybrid sparse+dense retrieval substrate: index pair, query embedding,
+jitted dense rerank, and reciprocal-rank fusion.
+
+The paper's relevance/efficiency argument only becomes measurable when a
+second ranking signal exists: both related systems (BM25→dense-rerank
+cascades; sparse+dense RRF fusion) dominate either modality alone on
+judged corpora. This module supplies the shared substrate the
+``cascade`` and ``rrf`` registry engines are built on:
+
+- :class:`HybridIndex` — a :class:`~repro.core.index.BlockedImpactIndex`
+  paired with a :class:`~repro.core.dense_guided.DenseGuidedIndex` over
+  per-document embeddings (**original-docid order**: row ``d`` of the
+  embedding matrix is document ``d``, so the sparse engines' already
+  orig-mapped result ids index the embedding table directly) plus a
+  ``q_proj`` [n_terms, D] term-projection matrix;
+- :func:`embed_queries` — the sparse→dense query bridge: a query's
+  embedding is the learned-weight-weighted sum of its terms' projection
+  rows, L2-normalized and rotated into the dense index's PCA basis.
+  Deriving the embedding from the *sparse* request keeps the hybrid
+  engines servable through every sparse path (Retriever, scheduler
+  routing, response cache) with no request-format change; callers with
+  real query embeddings pass them via ``SearchRequest.dense`` instead;
+- :func:`rerank_candidates` — cascade stage two: gather the candidates'
+  embedding rows and take the exact-dense top-k (jitted, static
+  ``(depth, k)`` so the k'-bucketed cascade compiles once per bucket
+  pair);
+- :func:`dense_topk` — batched exact dense ranking (the RRF dense leg);
+- :func:`rrf_fuse` — reciprocal-rank fusion ``sum 1/(rrf_k + rank)``
+  with deterministic (score-desc, docid-asc) tie-breaks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dense_guided import DenseGuidedIndex, build_dense_index
+from ..core.index import BlockedImpactIndex
+
+NEG = jnp.float32(-jnp.inf)
+
+
+@dataclasses.dataclass
+class HybridIndex:
+    """One corpus, two rankers: the sparse BII plus a dense index whose
+    embedding rows are **original-docid indexed** (row ``d`` embeds doc
+    ``d`` — required because sparse engine results arrive orig-mapped).
+
+    ``q_proj`` [n_terms, D] turns a sparse query into a dense one
+    (:func:`embed_queries`); real deployments would plug a query encoder
+    here, the synthetic harness plants a projection that is consistent
+    with the generated document embeddings.
+    """
+    sparse: BlockedImpactIndex
+    dense: DenseGuidedIndex
+    q_proj: jax.Array          # [n_terms, D]
+
+    @property
+    def n_docs(self) -> int:
+        return self.sparse.n_docs
+
+    @property
+    def dim(self) -> int:
+        return int(self.q_proj.shape[1])
+
+
+def build_hybrid_index(sparse: BlockedImpactIndex, doc_emb, q_proj,
+                       block_size: int = 512,
+                       d_cheap: int | None = None) -> HybridIndex:
+    """Pair a built BII with document embeddings (original-docid order)
+    and a query projection. The dense side goes through
+    ``core.dense_guided.build_dense_index`` — PCA rotation preserves dot
+    products and row order, so orig docids keep indexing rows."""
+    doc_emb = jnp.asarray(doc_emb, jnp.float32)
+    q_proj = jnp.asarray(q_proj, jnp.float32)
+    if doc_emb.ndim != 2 or doc_emb.shape[0] != sparse.n_docs:
+        raise ValueError(
+            f"doc_emb must be [n_docs={sparse.n_docs}, D] in original "
+            f"docid order, got shape {tuple(doc_emb.shape)}")
+    if q_proj.shape != (sparse.n_terms, doc_emb.shape[1]):
+        raise ValueError(
+            f"q_proj must be [n_terms={sparse.n_terms}, "
+            f"D={doc_emb.shape[1]}], got {tuple(q_proj.shape)}")
+    if d_cheap is None:
+        d_cheap = min(16, int(doc_emb.shape[1]))
+    dense = build_dense_index(doc_emb, block_size=min(block_size,
+                                                      sparse.n_docs),
+                              d_cheap=d_cheap)
+    return HybridIndex(sparse=sparse, dense=dense, q_proj=q_proj)
+
+
+@jax.jit
+def _embed_impl(q_proj, rotation, terms, wl):
+    # zero-weight padding terms contribute nothing; the row norm guard
+    # keeps an all-padding (no-op) query at the zero vector
+    e = (q_proj[terms] * wl[..., None]).sum(axis=-2)          # [B, D]
+    n = jnp.linalg.norm(e, axis=-1, keepdims=True)
+    return (e / jnp.maximum(n, 1e-9)) @ rotation              # rotated
+
+
+def embed_queries(hybrid: HybridIndex, terms, weights_l,
+                  dense=None) -> jax.Array:
+    """[B, D] query embeddings in the dense index's rotated basis.
+
+    ``dense`` (optional, [B, D]): caller-provided raw query embeddings
+    (e.g. a real query encoder) — rotated here; otherwise the sparse
+    query is bridged through ``q_proj`` weighted by the learned query
+    weights (the side the rank score is dominated by)."""
+    if dense is not None:
+        q = jnp.asarray(dense, jnp.float32)
+        if q.ndim != 2 or q.shape[1] != hybrid.dim:
+            raise ValueError(f"dense query embeddings must be [B, "
+                             f"{hybrid.dim}], got {tuple(q.shape)}")
+        return q @ hybrid.dense.rotation
+    return _embed_impl(hybrid.q_proj, hybrid.dense.rotation,
+                       jnp.asarray(terms, jnp.int32),
+                       jnp.asarray(weights_l, jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _rerank_impl(emb, q_rot, cand_ids, *, k):
+    safe = jnp.maximum(cand_ids, 0)
+    ce = emb[safe]                                      # [B, depth, D]
+    s = jnp.einsum("bkd,bd->bk", ce, q_rot)
+    s = jnp.where(cand_ids >= 0, s, NEG)
+    vals, idx = jax.lax.top_k(s, k)                     # stable ties:
+    ids = jnp.take_along_axis(cand_ids, idx, axis=1)    # first-stage order
+    ids = jnp.where(jnp.isneginf(vals), -1, ids)
+    return vals, ids
+
+
+def rerank_candidates(hybrid: HybridIndex, q_rot, cand_ids,
+                      k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Exact-dense rerank of first-stage candidates: gather the
+    candidates' embedding rows, score against the rotated queries, keep
+    the top ``k``. Jitted with static ``(depth, k)`` — with both depths
+    bucketed, one compile per bucket pair. Sentinel candidates (-1)
+    never resurface; short rows pad with (-1, -inf)."""
+    cand_ids = jnp.asarray(cand_ids, jnp.int32)
+    k = min(int(k), int(cand_ids.shape[1]))
+    vals, ids = _rerank_impl(hybrid.dense.emb, q_rot, cand_ids, k=k)
+    return np.asarray(vals, np.float32), np.asarray(ids, np.int32)
+
+
+@partial(jax.jit, static_argnames=("k", "n_docs"))
+def _dense_topk_impl(emb, q_rot, *, k, n_docs):
+    s = q_rot @ emb.T                                   # [B, N_padded]
+    live = jnp.arange(emb.shape[0]) < n_docs            # mask pad rows
+    s = jnp.where(live[None, :], s, NEG)
+    vals, ids = jax.lax.top_k(s, k)
+    return vals, ids.astype(jnp.int32)
+
+
+def dense_topk(hybrid: HybridIndex, q_rot,
+               k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Batched exact dense top-k over the whole corpus (the RRF dense
+    leg / the dense-only evaluation lane)."""
+    k = min(int(k), hybrid.n_docs)
+    vals, ids = _dense_topk_impl(hybrid.dense.emb, q_rot, k=k,
+                                 n_docs=hybrid.n_docs)
+    return np.asarray(vals, np.float32), np.asarray(ids, np.int32)
+
+
+def rrf_fuse(ids_a: np.ndarray, ids_b: np.ndarray, k: int,
+             rrf_k: float = 60.0) -> tuple[np.ndarray, np.ndarray]:
+    """Reciprocal-rank fusion of two ranked id lists (per row):
+    ``score(d) = sum over lists 1 / (rrf_k + rank_d)`` with 1-based
+    ranks; docs absent from a list contribute nothing. Ties break
+    deterministically by (fused score desc, docid asc). Sentinel ids
+    (< 0) are skipped; rows with fewer than ``k`` fused docs pad with
+    (-1, -inf)."""
+    ids_a, ids_b = np.asarray(ids_a), np.asarray(ids_b)
+    if ids_a.shape[0] != ids_b.shape[0]:
+        raise ValueError(f"row mismatch: {ids_a.shape[0]} vs "
+                         f"{ids_b.shape[0]} queries")
+    b = ids_a.shape[0]
+    out_ids = np.full((b, k), -1, np.int32)
+    out_scores = np.full((b, k), -np.inf, np.float32)
+    for row in range(b):
+        fused: dict[int, float] = {}
+        for ranked in (ids_a[row], ids_b[row]):
+            for rank, d in enumerate(ranked, start=1):
+                d = int(d)
+                if d < 0:
+                    continue
+                fused[d] = fused.get(d, 0.0) + 1.0 / (rrf_k + rank)
+        if not fused:
+            continue
+        docs = np.fromiter(fused.keys(), np.int64, len(fused))
+        vals = np.fromiter(fused.values(), np.float64, len(fused))
+        order = np.lexsort((docs, -vals))[:k]
+        out_ids[row, :len(order)] = docs[order]
+        out_scores[row, :len(order)] = vals[order]
+    return out_ids, out_scores

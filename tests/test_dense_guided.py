@@ -58,3 +58,61 @@ def test_guided_beta_one_prunes_hard(dense_index):
     p = TwoLevelParams(alpha=1.0, beta=1.0, gamma=0.0)
     _, _, st = retrieve_dense(dense_index, _query(0), p)
     assert st["candidates_fully_scored"] < st["n_candidates"] * 0.5
+
+
+# -- registry-facade parity (mirrors test_engine_parity for the dense
+# lane): the 'dense' engine behind Retriever.search must reproduce
+# exhaustive search exactly when rank-safe, and never exceed it when
+# guided ------------------------------------------------------------------
+
+def _query_batch(n=4):
+    return jnp.stack([_query(seed) for seed in range(n)])
+
+
+def test_dense_engine_rank_safe_matches_exhaustive(dense_index):
+    from repro.retrieval import Retriever
+    p = TwoLevelParams(alpha=0.0, beta=0.0, gamma=0.0)
+    r = Retriever.open(dense_index, p, engine="dense")
+    q = _query_batch()
+    resp = r.search(dense=q, k=10)
+    for qi in range(q.shape[0]):
+        ev, ei = exhaustive_dense(dense_index, q[qi], 10)
+        np.testing.assert_allclose(resp.scores[qi], ev,
+                                   rtol=1e-5, atol=1e-5)
+        assert set(resp.ids[qi].tolist()) == set(ei.tolist())
+        # untied positions must agree exactly (equal scores may swap)
+        mism = resp.ids[qi] != np.asarray(ei)
+        if mism.any():
+            tied = np.zeros_like(mism)
+            close = np.abs(np.diff(np.asarray(ev))) < 1e-5
+            tied[1:] |= close
+            tied[:-1] |= close
+            assert mism[~tied].sum() == 0
+
+
+@pytest.mark.parametrize("alpha,beta", [(1.0, 0.3), (1.0, 1.0)])
+def test_dense_engine_guided_dominated_by_exhaustive(dense_index, alpha,
+                                                     beta):
+    """Guided configs prune candidates, so at every rank the returned
+    score can only be <= the exhaustive score at that rank — pruning
+    never invents a better document."""
+    from repro.retrieval import Retriever
+    p = TwoLevelParams(alpha=alpha, beta=beta, gamma=0.0)
+    r = Retriever.open(dense_index, p, engine="dense")
+    q = _query_batch()
+    resp = r.search(dense=q, k=10)
+    for qi in range(q.shape[0]):
+        ev, _ = exhaustive_dense(dense_index, q[qi], 10)
+        got = resp.scores[qi]
+        assert np.all(got <= np.asarray(ev) + 1e-5)
+        assert np.all(np.diff(got) <= 1e-6)    # sorted descending
+        assert np.all(resp.ids[qi] >= 0)
+
+
+def test_dense_engine_requires_dense_queries(dense_index):
+    from repro.retrieval import Retriever
+    r = Retriever.open(dense_index, TwoLevelParams(), engine="dense")
+    with pytest.raises(ValueError, match="dense"):
+        r.search(terms=np.zeros((1, 2), np.int32),
+                 weights_b=np.zeros((1, 2), np.float32),
+                 weights_l=np.zeros((1, 2), np.float32), k=5)

@@ -1,0 +1,249 @@
+"""The relevance harness end-to-end: graded corpora, TREC interchange,
+the committed quality baseline, and the paper's headline small-k claim.
+
+The regression test at the bottom is the acceptance pin for this PR:
+on the misaligned graded corpus at k=10, guided traversal (GTI,
+alpha=beta=1) with over-estimated thresholds measurably degrades MRR@10
+against the rank-safe baseline; the two-level 2GTI-Accurate preset
+(beta=0 — learned-only local pruning) recovers to within tolerance; and
+the inversion (keeping two-level pruning disabled, i.e. staying on GTI)
+demonstrably fails that tolerance. All inputs are seed-pinned, so the
+asserted margins are deterministic, not statistical.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import twolevel
+from repro.eval import (build_hybrid, evaluate_ranking,
+                        evaluate_retriever, evaluate_trec, load_qrels,
+                        load_run, make_graded_corpus, write_run)
+from repro.eval.synthetic import _embed_queries_np
+from repro.retrieval import Retriever
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def graded():
+    """The quality_bench corpus (same knobs, same seed): the tests below
+    pin the same numbers the committed BENCH_quality.json reports."""
+    return make_graded_corpus(n_docs=4096, n_terms=1024, n_queries=32,
+                              dim=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def hybrid(graded):
+    return build_hybrid(graded, tile_size=128)
+
+
+def _mrr10(hybrid, graded, engine, params, tf, **opts):
+    r = Retriever.open(hybrid, params, engine=engine, **opts)
+    resp = r.search(k=10, threshold_factor=tf, **graded.queries())
+    return evaluate_ranking(resp.ids, graded.qrels)["mrr@10"]
+
+
+# -- graded corpus properties -------------------------------------------------
+
+def test_graded_corpus_structure(graded):
+    c = graded.corpus
+    assert len(graded.qrels) == 32
+    for gains, rel, dis in zip(graded.qrels, c.qrels, c.q_distractors):
+        grades = set(gains.values())
+        assert grades <= {1.0, 2.0} and 2.0 in grades
+        assert {d for d, g in gains.items() if g == 2.0} == rel
+        assert sum(1 for g in gains.values() if g == 1.0) == 3
+        assert not (set(gains) & dis)       # distractors are non-relevant
+    assert graded.doc_emb.shape == (4096, 32)
+    np.testing.assert_allclose(np.linalg.norm(graded.doc_emb, axis=1),
+                               1.0, atol=1e-5)
+
+
+def test_graded_corpus_is_seed_pinned(graded):
+    again = make_graded_corpus(n_docs=4096, n_terms=1024, n_queries=32,
+                               dim=32, seed=0)
+    np.testing.assert_array_equal(again.doc_emb, graded.doc_emb)
+    np.testing.assert_array_equal(again.q_proj, graded.q_proj)
+    assert again.qrels == graded.qrels
+    np.testing.assert_array_equal(again.corpus.queries,
+                                  graded.corpus.queries)
+
+
+def test_default_corpus_rng_unchanged_by_graded_knobs():
+    """The graded tier and boost scale must not perturb the seeded draw
+    sequence at their defaults: pinned parity baselines depend on
+    bit-identical corpora."""
+    from repro.data import make_corpus
+    base = make_corpus("splade_like", n_docs=512, n_terms=256,
+                       n_queries=4, seed=9)
+    explicit = make_corpus("splade_like", n_docs=512, n_terms=256,
+                           n_queries=4, seed=9, n_rel_partial=0,
+                           rel_boost_scale=1.0)
+    np.testing.assert_array_equal(base.learned.weights,
+                                  explicit.learned.weights)
+    np.testing.assert_array_equal(base.bm25.weights, explicit.bm25.weights)
+    assert base.qrels == explicit.qrels
+    assert base.qrels_graded == [{d: 2.0 for d in r} for r in base.qrels]
+
+
+def test_planted_embeddings_separate_grades(graded):
+    """Relevant docs must sit far above the noise floor in dense cosine,
+    partials in between — and the planting must target the *query-time*
+    embedding (the numpy twin of hybrid._embed_impl)."""
+    q_emb = _embed_queries_np(graded.q_proj, graded.corpus.queries,
+                              graded.corpus.q_weights_l)
+    rel_cos, part_cos, noise_cos = [], [], []
+    planted = set()
+    for gains in graded.qrels:
+        planted |= set(gains)
+    for d in graded.corpus.q_distractors:
+        planted |= d
+    rng = np.random.default_rng(0)
+    noise_docs = [d for d in rng.integers(0, 4096, 200) if d not in planted]
+    for qi, gains in enumerate(graded.qrels):
+        for d, g in gains.items():
+            (rel_cos if g == 2.0 else part_cos).append(
+                float(graded.doc_emb[d] @ q_emb[qi]))
+        noise_cos.extend(float(graded.doc_emb[d] @ q_emb[qi])
+                         for d in noise_docs[:10])
+    assert np.mean(rel_cos) > np.mean(part_cos) > np.mean(noise_cos)
+    assert np.mean(rel_cos) > 0.5
+    assert abs(np.mean(noise_cos)) < 0.1
+
+
+# -- TREC interchange ---------------------------------------------------------
+
+def test_trec_round_trip(tmp_path, graded, hybrid):
+    """write_run -> load_run -> evaluate gives the same metrics as the
+    in-memory driver (integer docids survive the string round trip)."""
+    r = Retriever.open(hybrid, twolevel.fast(), engine="cascade",
+                       depth=100)
+    resp = r.search(k=100, **graded.queries())
+    direct = evaluate_ranking(resp.ids, graded.qrels)
+
+    qids = [f"q{i}" for i in range(len(graded.qrels))]
+    run_path, qrels_path = tmp_path / "run.txt", tmp_path / "qrels.txt"
+    write_run(run_path, qids, resp.ids, resp.scores, tag="cascade")
+    qrels_path.write_text("".join(
+        f"{qid} 0 {d} {int(g)}\n"
+        for qid, gains in zip(qids, graded.qrels)
+        for d, g in sorted(gains.items())))
+    via_files = evaluate_trec(run_path, qrels_path)
+    for m in ("mrr@10", "ndcg@10", "recall@10", "recall@100"):
+        assert via_files[m] == pytest.approx(direct[m], abs=1e-9)
+
+
+def test_trec_loaders_edge_cases(tmp_path):
+    qp = tmp_path / "qrels.txt"
+    qp.write_text("q1 0 docA 2\nq1 0 docB 0\n\nq2 0 docA 1\n")
+    qrels = load_qrels(qp)
+    assert qrels.qids == ["q1", "q2"]
+    # grade-0 lines are kept as judgments but carry no gain
+    assert qrels.gains["q1"]["docB"] == 0.0
+    assert qrels.graded(["q1", "q2", "q3"]) == [
+        {qrels.doc_index["docA"]: 2.0}, {qrels.doc_index["docA"]: 1.0},
+        {}]
+    rp = tmp_path / "run.txt"
+    rp.write_text("q1 Q0 docB 2 0.5 t\nq1 Q0 docNEW 1 0.9 t\n")
+    qids, ids = load_run(rp, qrels, depth=4)
+    assert qids == ["q1"]
+    # rank column orders the row; unjudged docids get fresh indices
+    assert ids[0].tolist() == [qrels.doc_index["docNEW"],
+                               qrels.doc_index["docB"], -1, -1]
+    bad = tmp_path / "bad.txt"
+    bad.write_text("q1 0 docA\n")
+    with pytest.raises(ValueError, match="expected"):
+        load_qrels(bad)
+    with pytest.raises(ValueError, match="expected"):
+        load_run(bad, qrels)
+
+
+# -- the committed quality baseline -------------------------------------------
+
+def test_quality_bench_is_deterministic():
+    """Two collections at the same seed produce identical quality
+    metrics (latency fields excluded) — the property that makes
+    BENCH_quality.json diffable across PRs."""
+    from benchmarks.quality_bench import collect
+    a, b = collect(smoke=True), collect(smoke=True)
+    assert a["lanes"].keys() == b["lanes"].keys()
+    metrics = ("mrr@10", "ndcg@10", "recall@10", "recall@100",
+               "mrr@10_at_k10")
+    for lane in a["lanes"]:
+        for m in metrics:
+            if m in a["lanes"][lane]:
+                assert a["lanes"][lane][m] == b["lanes"][lane][m], (
+                    lane, m)
+
+
+def test_committed_baseline_cascade_beats_sparse():
+    """The acceptance pin: in the committed BENCH_quality.json, the
+    cascade lane's headline MRR@10 (k=10 execution) is strictly above
+    the sparse-only lane under every (method, threshold_factor), and
+    above the dense-only reference."""
+    data = json.loads((REPO / "BENCH_quality.json").read_text())
+    lanes = data["lanes"]
+    compared = 0
+    for name, row in lanes.items():
+        if not name.endswith("/sparse"):
+            continue
+        casc = lanes[name.replace("/sparse", "/cascade")]
+        assert casc["mrr@10_at_k10"] > row["mrr@10_at_k10"], name
+        assert casc["recall@100"] >= row["recall@100"] - 1e-9, name
+        compared += 1
+    assert compared == 6            # 3 methods x 2 threshold factors
+    best_casc = max(r["mrr@10_at_k10"] for n, r in lanes.items()
+                    if n.endswith("/cascade"))
+    assert best_casc > lanes["dense_only"]["mrr@10"]
+
+
+def test_evaluate_retriever_reports_quality_and_latency(graded, hybrid):
+    row = evaluate_retriever(
+        Retriever.open(hybrid, twolevel.fast(), engine="rrf", depth=100),
+        graded.queries(), graded.qrels, k=100)
+    assert row["engine"] == "rrf" and row["n_queries"] == 32
+    assert row["mrt_ms"] > 0 and np.isfinite(row["p99_ms"])
+    assert 0.0 < row["mrr@10"] <= 1.0
+    assert row["recall@100"] >= row["recall@10"] - 1e-9
+
+
+# -- the headline small-k claim -----------------------------------------------
+
+# Deterministic margins on the seed-0 corpus (measured: drop ~0.090,
+# recovery overshoot ~+0.025). DROP_MARGIN is what "measurably degrades"
+# means; RECOVERY_TOL is what "recovers" means — and the inversion check
+# below proves GTI itself fails that tolerance, so the recovery is
+# attributable to two-level pruning (beta=0), not slack in the bound.
+TF_MISALIGNED = 3.0
+DROP_MARGIN = 0.05
+RECOVERY_TOL = 0.02
+
+
+def test_small_k_guided_degradation_and_twolevel_recovery(graded, hybrid):
+    safe = _mrr10(hybrid, graded, "batched",
+                  twolevel.linear_combination(gamma=0.05), TF_MISALIGNED)
+    gti = _mrr10(hybrid, graded, "batched", twolevel.gti(), TF_MISALIGNED)
+    acc = _mrr10(hybrid, graded, "batched", twolevel.accurate(),
+                 TF_MISALIGNED)
+    # the claim: guided-only traversal measurably degrades MRR@10...
+    assert safe - gti >= DROP_MARGIN, (safe, gti)
+    # ...two-level pruning (beta=0) recovers within tolerance...
+    assert safe - acc <= RECOVERY_TOL, (safe, acc)
+    # ...and WITHOUT two-level pruning (stay on GTI) the recovery
+    # criterion demonstrably fails — the inverted configuration.
+    assert safe - gti > RECOVERY_TOL, (safe, gti)
+
+
+def test_small_k_cascade_recovers_guided_loss(graded, hybrid):
+    """The hybrid second stage recovers what guided pruning lost: at the
+    misaligned operating point, cascade MRR@10 beats sparse GTI by more
+    than the guided drop itself."""
+    gti = _mrr10(hybrid, graded, "batched", twolevel.gti(), TF_MISALIGNED)
+    casc = _mrr10(hybrid, graded, "cascade", twolevel.gti(),
+                  TF_MISALIGNED, depth=100)
+    rrf = _mrr10(hybrid, graded, "rrf", twolevel.gti(), TF_MISALIGNED,
+                 depth=100)
+    assert casc >= gti + DROP_MARGIN, (casc, gti)
+    assert rrf >= gti + DROP_MARGIN, (rrf, gti)

@@ -1,0 +1,292 @@
+"""Hybrid cascade/RRF engines: substrate units, registry/facade parity,
+mixed-k discipline, compile-once, and the serving path.
+
+Layering mirrors the implementation: ``retrieval/hybrid.py`` primitives
+(fusion math, sentinel discipline, index validation) are pinned with
+hand-checkable cases; the registry engines are checked for *plumbing*
+parity against the same primitives composed manually; then the whole
+stack is driven through ``AsyncRetrievalScheduler`` — mixed-k batches
+bit-match direct ``Retriever.search``, jit caches stay cold across
+depth/threshold sweeps, and response-cache keys distinguish engines.
+"""
+import numpy as np
+import pytest
+
+from repro.core import twolevel
+from repro.eval import build_hybrid, make_graded_corpus
+from repro.retrieval import Retriever, SearchRequest, build_hybrid_index
+from repro.retrieval.hybrid import (dense_topk, embed_queries,
+                                    rerank_candidates, rrf_fuse)
+from repro.serve import (AsyncRetrievalScheduler, RoutingPolicy,
+                         SchedulerConfig, route, single_route)
+
+PARAMS = twolevel.fast()
+
+
+@pytest.fixture(scope="module")
+def graded():
+    return make_graded_corpus(n_docs=1024, n_terms=512, n_queries=8,
+                              n_q_terms=5, dim=16, seed=5)
+
+
+@pytest.fixture(scope="module")
+def hybrid(graded):
+    return build_hybrid(graded, tile_size=128)
+
+
+def _q(graded):
+    return graded.queries()
+
+
+def _req(graded, i, k=10, threshold_factor=None):
+    c = graded.corpus
+    return SearchRequest(terms=c.queries[i], weights_b=c.q_weights_b[i],
+                         weights_l=c.q_weights_l[i], k=k,
+                         threshold_factor=threshold_factor)
+
+
+# -- substrate units ----------------------------------------------------------
+
+def test_rrf_fuse_hand_example():
+    """score(d) = sum 1/(60 + rank); agreement on both lists wins, ties
+    break docid-ascending."""
+    a = np.array([[1, 2, 3]])
+    b = np.array([[2, 1, 9]])
+    ids, scores = rrf_fuse(a, b, k=4, rrf_k=60.0)
+    s1 = 1 / 61 + 1 / 62          # doc 1: rank 1 + rank 2
+    s2 = 1 / 62 + 1 / 61          # doc 2: rank 2 + rank 1 (== s1)
+    s3 = 1 / 63                   # single-list docs
+    assert ids[0].tolist() == [1, 2, 3, 9]      # tie 1-vs-2: docid asc
+    np.testing.assert_allclose(scores[0], [s1, s2, s3, s3], rtol=1e-6)
+
+
+def test_rrf_fuse_sentinels_and_padding():
+    a = np.array([[4, -1, -1]])
+    b = np.array([[-1, -1, -1]])
+    ids, scores = rrf_fuse(a, b, k=3)
+    assert ids[0].tolist() == [4, -1, -1]
+    assert scores[0][0] == pytest.approx(1 / 61)
+    assert np.isneginf(scores[0][1:]).all()
+    with pytest.raises(ValueError, match="row mismatch"):
+        rrf_fuse(np.zeros((2, 3)), np.zeros((3, 3)), k=2)
+
+
+def test_build_hybrid_index_validates(hybrid):
+    sparse = hybrid.sparse
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="original"):
+        build_hybrid_index(sparse,
+                           rng.standard_normal((sparse.n_docs - 1, 8)),
+                           rng.standard_normal((sparse.n_terms, 8)))
+    with pytest.raises(ValueError, match="q_proj"):
+        build_hybrid_index(sparse,
+                           rng.standard_normal((sparse.n_docs, 8)),
+                           rng.standard_normal((sparse.n_terms, 4)))
+
+
+def test_embed_queries_dense_override_rotates(graded, hybrid):
+    """A caller-supplied embedding must land in the same rotated basis
+    as the bridged one (exactly what the dense index's scorer expects)."""
+    raw = np.asarray(
+        (np.asarray(hybrid.q_proj)[graded.corpus.queries]
+         * graded.corpus.q_weights_l[..., None]).sum(axis=-2))
+    raw /= np.maximum(np.linalg.norm(raw, axis=1, keepdims=True), 1e-9)
+    via_bridge = embed_queries(hybrid, graded.corpus.queries,
+                               graded.corpus.q_weights_l)
+    via_override = embed_queries(hybrid, None, None, dense=raw)
+    np.testing.assert_allclose(np.asarray(via_bridge),
+                               np.asarray(via_override), atol=1e-5)
+    with pytest.raises(ValueError, match="B, 16"):
+        embed_queries(hybrid, None, None,
+                      dense=np.zeros((3, 7), np.float32))
+
+
+def test_rerank_sentinels_never_resurface(graded, hybrid):
+    q_rot = embed_queries(hybrid, graded.corpus.queries,
+                          graded.corpus.q_weights_l)[:1]
+    cands = np.array([[5, -1, 17, -1]], np.int32)
+    scores, ids = rerank_candidates(hybrid, q_rot, cands, k=4)
+    assert set(ids[0].tolist()) <= {5, 17, -1}
+    assert (ids[0][:2] >= 0).all()              # two live candidates lead
+    assert ids[0][2:].tolist() == [-1, -1]
+    assert np.isneginf(scores[0][2:]).all()
+    assert scores[0][0] >= scores[0][1]
+
+
+# -- registry engines vs the primitives composed by hand ----------------------
+
+def test_cascade_matches_manual_composition(graded, hybrid):
+    r = Retriever.open(hybrid, PARAMS, engine="cascade", depth=100,
+                       k_buckets=None)
+    resp = r.search(**_q(graded), k=10)
+    first = Retriever.open(hybrid, PARAMS, engine="batched",
+                           k_buckets=None).search(**_q(graded), k=100)
+    q_rot = embed_queries(hybrid, graded.corpus.queries,
+                          graded.corpus.q_weights_l)
+    want_scores, want_ids = rerank_candidates(hybrid, q_rot, first.ids,
+                                              k=10)
+    np.testing.assert_array_equal(resp.ids, want_ids)
+    np.testing.assert_allclose(resp.scores, want_scores, rtol=1e-6)
+    assert resp.stats["cascade_depth"] == 100.0
+    # every result is a first-stage candidate (cascade never invents docs)
+    for row, cand in zip(resp.ids, first.ids):
+        assert set(row.tolist()) <= set(cand.tolist()) | {-1}
+
+
+def test_rrf_engine_matches_manual_fusion(graded, hybrid):
+    r = Retriever.open(hybrid, PARAMS, engine="rrf", depth=100,
+                       rrf_k=42.0, k_buckets=None)
+    resp = r.search(**_q(graded), k=10)
+    first = Retriever.open(hybrid, PARAMS, engine="batched",
+                           k_buckets=None).search(**_q(graded), k=100)
+    q_rot = embed_queries(hybrid, graded.corpus.queries,
+                          graded.corpus.q_weights_l)
+    _, dense_ids = dense_topk(hybrid, q_rot, k=100)
+    want_ids, want_scores = rrf_fuse(first.ids, dense_ids, k=10,
+                                     rrf_k=42.0)
+    np.testing.assert_array_equal(resp.ids, want_ids)
+    np.testing.assert_allclose(resp.scores, want_scores, rtol=1e-6)
+    assert resp.stats["rrf_k"] == 42.0 and resp.stats["fusion_depth"] == 100
+
+
+def test_hybrid_engine_open_guards(graded, hybrid):
+    with pytest.raises(TypeError, match="HybridIndex"):
+        Retriever.open(hybrid.sparse, PARAMS, engine="cascade")
+    with pytest.raises(ValueError, match="first_stage"):
+        Retriever.open(hybrid, PARAMS, engine="cascade",
+                       first_stage="dense")
+    with pytest.raises(ValueError, match="depth"):
+        Retriever.open(hybrid, PARAMS, engine="rrf", depth=0)
+    with pytest.raises(ValueError, match="rrf_k"):
+        Retriever.open(hybrid, PARAMS, engine="rrf", rrf_k=0.0)
+
+
+def test_sparse_engines_unwrap_hybrid_index(graded, hybrid):
+    """A HybridIndex opened under a sparse engine serves its .sparse side
+    bit-identically — the contract that lets one scheduler index back a
+    mixed sparse+hybrid routing policy."""
+    via_hybrid = Retriever.open(hybrid, PARAMS,
+                                engine="batched").search(**_q(graded),
+                                                         k=10)
+    via_sparse = Retriever.open(hybrid.sparse, PARAMS,
+                                engine="batched").search(**_q(graded),
+                                                         k=10)
+    np.testing.assert_array_equal(via_hybrid.ids, via_sparse.ids)
+    np.testing.assert_array_equal(via_hybrid.scores, via_sparse.scores)
+
+
+def test_dense_engine_unwraps_hybrid_index(graded, hybrid):
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((2, 16)).astype(np.float32)
+    via_hybrid = Retriever.open(hybrid, twolevel.original(gamma=0.0),
+                                engine="dense").search(dense=q, k=5)
+    via_dense = Retriever.open(hybrid.dense, twolevel.original(gamma=0.0),
+                               engine="dense").search(dense=q, k=5)
+    np.testing.assert_array_equal(via_hybrid.ids, via_dense.ids)
+
+
+# -- mixed-k and compile discipline -------------------------------------------
+
+@pytest.mark.parametrize("engine", ["cascade", "rrf"])
+def test_mixed_k_batch_matches_per_row_calls(graded, engine, hybrid):
+    r = Retriever.open(hybrid, PARAMS, engine=engine, depth=100)
+    ks = [3, 10, 5, 10, 7, 10, 2, 9]
+    resp = r.search(**_q(graded), k=ks)
+    assert resp.ks.tolist() == ks
+    c = graded.corpus
+    for i, k in enumerate(ks):
+        solo = r.search(terms=c.queries[i:i + 1],
+                        weights_b=c.q_weights_b[i:i + 1],
+                        weights_l=c.q_weights_l[i:i + 1], k=k)
+        np.testing.assert_array_equal(resp.ids[i, :k], solo.ids[0])
+        assert (resp.ids[i, k:] == -1).all()
+        assert np.isneginf(resp.scores[i, k:]).all()
+
+
+def test_hybrid_compile_once_per_bucket_pair(graded, hybrid):
+    """Within-bucket k sweeps and threshold_factor sweeps retrace
+    neither the sparse first stage nor the jitted rerank."""
+    from repro.core.traversal import _retrieve_batched_impl
+    from repro.retrieval.hybrid import _rerank_impl
+    r = Retriever.open(hybrid, PARAMS, engine="cascade", depth=100)
+    for k in (10, 100):                       # warm both k buckets
+        r.search(**_q(graded), k=k)
+    n_first = _retrieve_batched_impl._cache_size()
+    n_rerank = _rerank_impl._cache_size()
+    for k in (1, 5, 10, 42, 100):
+        r.search(**_q(graded), k=k, threshold_factor=1.0 + k / 10)
+    r.search(**_q(graded), k=[3, 10, 5, 10, 7, 10, 2, 9])
+    assert _retrieve_batched_impl._cache_size() == n_first
+    assert _rerank_impl._cache_size() == n_rerank
+
+
+# -- the serving path ---------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["cascade", "rrf"])
+def test_scheduler_serves_hybrid_engine_mixed_k(graded, engine, hybrid):
+    """A mixed-k stream through the scheduler bit-matches direct
+    Retriever calls — hybrid engines ride the sparse serving path with
+    no request-format change (embeddings come from the q_proj bridge)."""
+    s = AsyncRetrievalScheduler(
+        hybrid, PARAMS, SchedulerConfig(max_batch=4, cache_size=0),
+        routing=single_route(engine, depth=100))
+    direct = Retriever.open(hybrid, PARAMS, engine=engine, depth=100)
+    ks = [10, 3, 7, 10, 5, 9]
+    handles = [s.submit(_req(graded, i, k=k)) for i, k in enumerate(ks)]
+    s.flush()
+    c = graded.corpus
+    for i, (h, k) in enumerate(zip(handles, ks)):
+        resp = h.result()
+        assert resp.engine == engine and resp.ids.shape == (1, k)
+        solo = direct.search(terms=c.queries[i:i + 1],
+                             weights_b=c.q_weights_b[i:i + 1],
+                             weights_l=c.q_weights_l[i:i + 1], k=k)
+        np.testing.assert_array_equal(resp.ids[0], solo.ids[0])
+        np.testing.assert_allclose(resp.scores[0], solo.scores[0],
+                                   rtol=1e-6)
+
+
+def test_scheduler_mixed_sparse_hybrid_policy(graded, hybrid):
+    """One HybridIndex backs a policy that routes short queries to the
+    sparse engine and long ones to cascade."""
+    policy = RoutingPolicy((
+        route("short", 3, "batched", pad_terms=3),
+        route("long", None, "cascade", depth=100)))
+    s = AsyncRetrievalScheduler(hybrid, PARAMS,
+                                SchedulerConfig(max_batch=4, cache_size=0),
+                                routing=policy)
+    c = graded.corpus
+    short = SearchRequest(terms=c.queries[0][:3],
+                          weights_b=c.q_weights_b[0][:3],
+                          weights_l=c.q_weights_l[0][:3], k=5)
+    hs, hl = s.submit(short), s.submit(_req(graded, 1, k=5))
+    s.flush()
+    assert hs.route == "short" and hs.result().engine == "batched"
+    assert hl.route == "long" and hl.result().engine == "cascade"
+
+
+def test_cache_distinguishes_hybrid_engines(graded, hybrid):
+    """Identical queries served by different engines must never share a
+    response-cache entry: the policy fingerprint (part of every cache
+    key) pins the engine and its options."""
+    fp_c = single_route("cascade", depth=100).fingerprint(PARAMS)
+    fp_r = single_route("rrf", depth=100).fingerprint(PARAMS)
+    fp_r2 = single_route("rrf", depth=100, rrf_k=10.0).fingerprint(PARAMS)
+    assert len({fp_c, fp_r, fp_r2}) == 3
+    # and a same-engine resubmit is a genuine hit
+    s = AsyncRetrievalScheduler(
+        hybrid, PARAMS, SchedulerConfig(max_batch=2, cache_size=8),
+        routing=single_route("cascade", depth=100))
+    s.submit(_req(graded, 0, k=5))
+    s.flush()
+    h = s.submit(_req(graded, 0, k=5))
+    assert h.cached and h.done()
+    assert s.stats()["cache_hits"] == 1
+    # different engine opts -> different scheduler key -> miss
+    s2 = AsyncRetrievalScheduler(
+        hybrid, PARAMS, SchedulerConfig(max_batch=2, cache_size=8),
+        routing=single_route("cascade", depth=1000))
+    h2 = s2.submit(_req(graded, 0, k=5))
+    assert not h2.done()
+    s2.flush()
+    np.testing.assert_array_equal(h2.result().ids.shape, (1, 5))

@@ -21,7 +21,8 @@ from repro.retrieval import (K_BUCKETS, Retriever, SearchRequest,
                              bucket_k, engine_names, get_engine)
 from repro.serve.sharded import shard_retrieve_batched
 
-ALL_ENGINES = ("batched", "dense", "kernel", "sequential", "sharded")
+ALL_ENGINES = ("batched", "cascade", "dense", "kernel", "rrf",
+               "sequential", "sharded")
 
 
 @pytest.fixture(scope="module")
@@ -61,6 +62,17 @@ def test_every_engine_serves_a_request(setup, engine):
                            twolevel.original(gamma=0.0), engine="dense")
         resp = r.search(dense=rng.standard_normal((3, 16)).astype(
             np.float32), k=5)
+    elif engine in ("cascade", "rrf"):
+        from repro.retrieval import build_hybrid_index
+        rng = np.random.default_rng(0)
+        hybrid = build_hybrid_index(
+            index,
+            rng.standard_normal((index.n_docs, 16)).astype(np.float32),
+            rng.standard_normal((index.n_terms, 16)).astype(np.float32),
+            block_size=256, d_cheap=4)
+        r = Retriever.open(hybrid, twolevel.fast(), engine=engine,
+                           depth=20)
+        resp = r.search(**_q(corpus), k=5)
     else:
         r = Retriever.open(index, twolevel.fast(), engine=engine)
         resp = r.search(**_q(corpus), k=5)
