@@ -4,7 +4,8 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow test-api test-serve test-traversal \
+.PHONY: test test-fast test-slow test-api test-serve test-stress \
+    test-traversal \
         test-quality tier1 bench-smoke
 
 test: test-fast test-slow
@@ -22,11 +23,20 @@ test-slow:
 test-api:
 	$(PYTEST) -m "not slow" tests/test_retrieval_api.py
 
-# Serving fast lane: the async scheduler / router / response-cache suite
-# plus the deprecated-server shim edges (the quickest signal when
-# touching serve/scheduler.py, serve/router.py, or serve/engine.py).
+# Serving fast lane: the async scheduler / router / response-cache suite,
+# the executor-pool/backpressure tests (minus the threaded saturation
+# soaks), and the deprecated-server shim edges (the quickest signal when
+# touching serve/scheduler.py, serve/executor.py, serve/router.py, or
+# serve/engine.py).
 test-serve:
-	$(PYTEST) -m "not slow" tests/test_scheduler.py tests/test_serve_edges.py
+	$(PYTEST) -m "not slow and not stress" tests/test_scheduler.py \
+	    tests/test_executor.py tests/test_serve_edges.py
+
+# Multi-worker saturation soaks: executor pools under overload with
+# shedding and concurrent submitters (threaded, timing-sensitive — kept
+# out of the fast serve lane).
+test-stress:
+	$(PYTEST) -m stress
 
 # Traversal fast lane: the chunked/full/kernel parity + early-exit suite
 # (the quickest signal when touching core/plan, core/traversal, or the

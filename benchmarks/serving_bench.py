@@ -16,16 +16,27 @@ writes ``BENCH_serving.json`` (repo root by default):
   - ``routed_cached`` the same policy plus the LRU response cache (the
                       stream repeats queries, as real traffic does).
 
-Each config records QPS/MRT/P99 plus the scheduler's cache-hit and
-routing counters. Jit caches are warmed by a discarded scheduler with
-identical routes before timing, so MRT measures serving, not
+then sweeps the **executor pool** (1/2/4/8 workers, bounded admission
+with load-shedding and priority aging) over the same stream — the
+QPS-vs-executors curve. Every config records QPS/MRT/P99 plus the
+scheduler's cache-hit, routing, admission (admitted/shed/rejected) and
+per-executor counters, and the grid warmup time. Jit caches are warmed
+before timing (a discarded scheduler for the sync configs; the pool's
+own startup warmup for the sweep), so MRT measures serving, not
 compilation. The corpus is tiny and seeded; numbers are stable enough
 to diff across PRs (``make bench-smoke`` is the CI entry).
+
+Executor scaling is compute-bound: the pool multiplies throughput only
+up to the host's free cores (XLA's CPU backend keeps a worker busy for
+a batch's whole service time). ``meta.host_cores`` records what this
+run had — on a 1-core host the curve is flat by construction, which is
+exactly what the curve is for: like-for-like comparison across hosts.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 
 from repro.core import build_index, twolevel
@@ -55,6 +66,10 @@ CONFIGS = (
     ("routed", table8_policy, 0),
     ("routed_cached", table8_policy, 256),
 )
+EXECUTOR_SWEEP = (1, 2, 4, 8)
+ADMISSION_LIMIT = 8 * MAX_BATCH   # bounded queue: saturation sheds,
+ADMISSION_POLICY = "shed"         # so the median stays bounded and the
+AGING_MS = 50.0                   # tail (P99) absorbs the overload
 
 
 def _requests(corpus, n: int) -> list:
@@ -83,35 +98,73 @@ def collect() -> dict:
         run_workload(fresh(), _requests(corpus, 4 * MAX_BATCH), qps=1e6)
         stats = run_workload(fresh(), _requests(corpus, N_REQUESTS),
                              qps=QPS, seed=3)
-        configs[name] = {
-            "n": stats["n"], "qps_offered": QPS,
-            "qps_achieved": round(stats["qps_achieved"], 2),
-            "mrt_ms": round(stats["mrt_ms"], 3),
-            "p50_ms": round(stats["p50_ms"], 3),
-            "p99_ms": round(stats["p99_ms"], 3),
-            "batches": stats["batches"],
-            "cache_hits": stats["cache_hits"],
-            "cache_misses": stats["cache_misses"],
-            "requests_by_route": stats["requests_by_route"],
-            "batches_by_group": stats["batches_by_group"],
-        }
+        configs[name] = _row(stats, executors=0)
+    sweep = {}
+    for n_exec in EXECUTOR_SWEEP:
+        sched = AsyncRetrievalScheduler(
+            index, params,
+            SchedulerConfig(max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+                            cache_size=0, executors=n_exec,
+                            admission_limit=ADMISSION_LIMIT,
+                            admission_policy=ADMISSION_POLICY,
+                            aging_ms=AGING_MS),
+            routing=table8_policy())
+        # the pool warms the routing grid at start(), inside the context
+        # manager but before run_workload's clock starts
+        with sched:
+            stats = run_workload(sched, _requests(corpus, N_REQUESTS),
+                                 qps=QPS, seed=3)
+        sweep[f"executors_{n_exec}"] = _row(stats, executors=n_exec)
     return {"meta": {"corpus": "splade_like", "n_docs": N_DOCS,
                      "n_terms": N_TERMS, "n_queries": N_QUERIES,
                      "tile_size": TILE, "n_requests": N_REQUESTS,
                      "short_len": SHORT_LEN, "k_pool": list(K_POOL),
                      "max_batch": MAX_BATCH,
+                     "admission_limit": ADMISSION_LIMIT,
+                     "admission_policy": ADMISSION_POLICY,
+                     "aging_ms": AGING_MS,
+                     "host_cores": os.cpu_count(),
+                     "scaling_note": "executor scaling is bounded by "
+                                     "host_cores: XLA's CPU backend keeps "
+                                     "a worker busy for a batch's whole "
+                                     "service time, so on a 1-core host "
+                                     "the QPS-vs-executors curve is flat",
                      "p99_note": f"p99_ms over {N_REQUESTS} requests is a "
                                  "true percentile (n >= 100)"},
-            "configs": configs}
+            "configs": configs, "executor_sweep": sweep}
+
+
+def _row(stats: dict, executors: int) -> dict:
+    return {
+        "n": stats["n"], "qps_offered": QPS,
+        "qps_achieved": round(stats["qps_achieved"], 2),
+        "mrt_ms": round(stats["mrt_ms"], 3),
+        "p50_ms": round(stats["p50_ms"], 3),
+        "p99_ms": round(stats["p99_ms"], 3),
+        "batches": stats["batches"],
+        "executors": executors,
+        "admitted": stats["admitted"],
+        "shed": stats["shed"],
+        "rejected": stats["rejected"],
+        "warmup_s": round(stats["warmup_s"], 3),
+        "cache_hits": stats["cache_hits"],
+        "cache_misses": stats["cache_misses"],
+        "requests_by_route": stats["requests_by_route"],
+        "batches_by_group": stats["batches_by_group"],
+        "batches_by_executor": {str(k): v for k, v in
+                                stats["batches_by_executor"].items()},
+    }
 
 
 def run(out) -> None:
     data = collect()
-    for name, row in data["configs"].items():
+    rows = {**data["configs"],
+            **{f"pool/{k}": v for k, v in data["executor_sweep"].items()}}
+    for name, row in rows.items():
         out(emit(f"serving/{name}", row["mrt_ms"],
                  {k: v for k, v in row.items()
                   if k not in ("mrt_ms", "requests_by_route",
-                               "batches_by_group")}))
+                               "batches_by_group", "batches_by_executor")}))
 
 
 def main() -> None:
@@ -132,6 +185,12 @@ def main() -> None:
               f"qps={row['qps_achieved']:6.1f} "
               f"cache={hits}/{hits + row['cache_misses']} "
               f"vs-baseline={row['mrt_ms'] / base:5.2f}x")
+    for name, row in data["executor_sweep"].items():
+        print(f"{name:14s} MRT={row['mrt_ms']:8.2f}ms "
+              f"P99={row['p99_ms']:8.2f}ms "
+              f"qps={row['qps_achieved']:6.1f} "
+              f"admitted={row['admitted']} shed={row['shed']} "
+              f"warmup={row['warmup_s']:.2f}s")
     print(f"wrote {path}")
 
 

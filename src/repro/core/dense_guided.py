@@ -71,9 +71,10 @@ def _bound(q, bmax, bmin):
     return jnp.sum(jnp.maximum(q * bmax, q * bmin), axis=-1)
 
 
-@partial(jax.jit, static_argnames=("k", "block_size", "d_cheap", "n_blocks"))
-def _retrieve(emb, bmax, bmin, q, alpha, beta, gamma,
-              *, k, block_size, d_cheap, n_blocks):
+def _retrieve_one(emb, bmax, bmin, q, alpha, beta, gamma,
+                  *, k, block_size, d_cheap, n_blocks):
+    """One query's guided block scan (unjitted body — shared by the
+    single-query entry and the vmapped batched lane)."""
     d = emb.shape[1]
     qc = q.at[d_cheap:].set(0.0)
     qr = q.at[:d_cheap].set(0.0)
@@ -119,6 +120,49 @@ def _retrieve(emb, bmax, bmin, q, alpha, beta, gamma,
             jnp.float32(0.0))
     (gv, gi, lv, li, rv, ri, scored), _ = jax.lax.scan(step, init, order)
     return rv, ri, scored
+
+
+@partial(jax.jit, static_argnames=("k", "block_size", "d_cheap", "n_blocks"))
+def _retrieve(emb, bmax, bmin, q, alpha, beta, gamma,
+              *, k, block_size, d_cheap, n_blocks):
+    return _retrieve_one(emb, bmax, bmin, q, alpha, beta, gamma, k=k,
+                         block_size=block_size, d_cheap=d_cheap,
+                         n_blocks=n_blocks)
+
+
+@partial(jax.jit, static_argnames=("k", "block_size", "d_cheap", "n_blocks"))
+def _retrieve_dense_batched_impl(emb, bmax, bmin, q, alpha, beta, gamma,
+                                 *, k, block_size, d_cheap, n_blocks):
+    """[B, D] queries through the guided block scan in one jitted call
+    (vmap over the per-query scan — each row keeps its own block order
+    and thresholds, so results match the per-query path)."""
+    return jax.vmap(
+        lambda qi: _retrieve_one(emb, bmax, bmin, qi, alpha, beta, gamma,
+                                 k=k, block_size=block_size,
+                                 d_cheap=d_cheap, n_blocks=n_blocks))(q)
+
+
+def retrieve_dense_batched(index: DenseGuidedIndex, q: jax.Array,
+                           params: TwoLevelParams, k: int | None = None):
+    """Batched guided dense retrieval: one jitted ``[B, D]`` call instead
+    of a host-side per-query loop (the serving-load lane the ``dense``
+    registry engine uses). Returns ``(scores [B, k], ids [B, k], stats)``
+    with a per-query ``candidates_fully_scored`` array. Compiles once per
+    (B, k) shape pair; rank-safe configs reduce to the batched exact
+    ``[B, D] @ [N, D]^T`` top-k the blocks implement."""
+    q = jnp.asarray(q, index.emb.dtype)
+    if q.ndim != 2:
+        raise ValueError(f"retrieve_dense_batched takes [B, D] queries, "
+                         f"got shape {tuple(q.shape)}")
+    rv, ri, scored = _retrieve_dense_batched_impl(
+        index.emb, index.bmax, index.bmin, q @ index.rotation,
+        jnp.float32(params.alpha), jnp.float32(params.beta),
+        jnp.float32(params.gamma), k=resolve_k(params, k),
+        block_size=index.block_size,
+        d_cheap=index.d_cheap, n_blocks=index.n_blocks)
+    stats = {"candidates_fully_scored": np.asarray(scored, np.float32),
+             "n_candidates": float(index.emb.shape[0])}
+    return np.asarray(rv), np.asarray(ri), stats
 
 
 def retrieve_dense(index: DenseGuidedIndex, q: jax.Array,

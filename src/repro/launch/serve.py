@@ -77,6 +77,21 @@ def main() -> None:
     ap.add_argument("--cache", type=int, default=0,
                     help="LRU response-cache entries (0 = off)")
     ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--executors", type=int, default=0,
+                    help="executor-pool worker threads, each with its "
+                         "own Retriever replica (0 = sync inline "
+                         "dispatch, the deterministic default)")
+    ap.add_argument("--admission-limit", type=int, default=0,
+                    help="bounded admission queue: max pending rows "
+                         "(0 = unbounded)")
+    ap.add_argument("--admission-policy", default="block",
+                    choices=("block", "reject", "shed"),
+                    help="what submit() does when the admission queue "
+                         "is full")
+    ap.add_argument("--aging-ms", type=float, default=0.0,
+                    help="priority aging: a queued request gains one "
+                         "priority level per this many ms waited "
+                         "(0 = strict priority)")
     ap.add_argument("--shards", type=int, default=1,
                     help="partition the index over N tile-range shards "
                          "(implies --engine sharded)")
@@ -112,7 +127,11 @@ def main() -> None:
 
     sched = AsyncRetrievalScheduler(
         index, params,
-        SchedulerConfig(max_batch=args.max_batch, cache_size=args.cache),
+        SchedulerConfig(max_batch=args.max_batch, cache_size=args.cache,
+                        executors=args.executors,
+                        admission_limit=args.admission_limit,
+                        admission_policy=args.admission_policy,
+                        aging_ms=args.aging_ms),
         routing=routing)
     rng = np.random.default_rng(0)
     k_pool = args.k_mix if args.k_mix else [args.k]
@@ -121,7 +140,13 @@ def main() -> None:
                           weights_l=corpus.q_weights_l[i % 64],
                           k=int(rng.choice(k_pool)))
             for i in range(args.requests)]
-    stats = run_workload(sched, reqs, qps=args.qps)
+    if args.executors > 0:
+        print(f"# executor pool: {args.executors} workers "
+              f"(warming routing grid...)")
+        with sched:
+            stats = run_workload(sched, reqs, qps=args.qps)
+    else:
+        stats = run_workload(sched, reqs, qps=args.qps)
     print(stats)
 
 

@@ -30,7 +30,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-from ..core.dense_guided import DenseGuidedIndex, retrieve_dense
+from ..core.dense_guided import DenseGuidedIndex, retrieve_dense_batched
 from ..core.index import BlockedImpactIndex
 from ..core.traversal import (RetrievalResult, retrieve_batched,
                               retrieve_sequential)
@@ -67,11 +67,20 @@ def get_engine(name: str) -> type:
 class Engine(Protocol):
     """What the Retriever facade drives. ``search`` executes one batch at
     depth ``k`` under pruning policy ``params`` and returns the raw
-    engine result (internal ids already mapped to original docid space)."""
+    engine result (internal ids already mapped to original docid space).
+
+    ``replicate`` returns a fresh instance with the same configuration
+    **sharing the open index arrays** (no rebuild, no re-partition) —
+    what the serving executor pool clones per worker. Engines hold no
+    per-call mutable state, so a replica is just a second dispatch
+    surface over the same device buffers."""
     name: str
 
     def search(self, terms, weights_b, weights_l, dense, *, k: int,
                params: TwoLevelParams) -> RetrievalResult:
+        ...
+
+    def replicate(self, params: TwoLevelParams) -> "Engine":
         ...
 
 
@@ -127,6 +136,10 @@ class BatchedEngine:
                                 traversal=self.traversal,
                                 chunk_tiles=self.chunk_tiles)
 
+    def replicate(self, params):
+        return type(self)(self.index, params, traversal=self.traversal,
+                          chunk_tiles=self.chunk_tiles)
+
 
 @register_engine("kernel")
 class KernelEngine(BatchedEngine):
@@ -153,6 +166,9 @@ class SequentialEngine:
     def search(self, terms, weights_b, weights_l, dense, *, k, params):
         return retrieve_sequential(self.index, terms, weights_b, weights_l,
                                    params, warmup=self.warmup, k=k)
+
+    def replicate(self, params):
+        return type(self)(self.index, params, warmup=self.warmup)
 
 
 @register_engine("sharded")
@@ -198,14 +214,28 @@ class ShardedEngine:
             exchange_every=self.exchange_every, k=k,
             traversal=self.traversal, chunk_tiles=self.chunk_tiles)
 
+    def replicate(self, params):
+        # hand over the prebuilt ShardedImpactIndex: a replica must never
+        # re-partition the tile ranges (stacked shard arrays are the
+        # expensive part of open)
+        return type(self)(self.sharded, params, mesh=self.mesh,
+                          axis_name=self.axis_name,
+                          use_kernel=self.use_kernel,
+                          exchange_every=self.exchange_every,
+                          traversal=self.traversal,
+                          chunk_tiles=self.chunk_tiles)
+
 
 @register_engine("dense")
 class DenseEngine:
     """2GTI transferred to blocked dense retrieval (two-tower candidates).
 
-    Queries arrive as ``SearchRequest.dense`` [B, D] embeddings; the
-    per-query guided block scan runs host-side. ``threshold_factor``
-    overrides are ignored — the dense skip test has no factor knob."""
+    Queries arrive as ``SearchRequest.dense`` [B, D] embeddings and the
+    whole batch runs through one jitted guided block scan
+    (``core.dense_guided.retrieve_dense_batched`` — a vmap over the
+    per-query scan, so each row keeps its own block order/thresholds and
+    results match the per-query path). ``threshold_factor`` overrides
+    are ignored — the dense skip test has no factor knob."""
 
     def __init__(self, index, params: TwoLevelParams):
         if isinstance(index, HybridIndex):
@@ -220,20 +250,15 @@ class DenseEngine:
         if dense is None:
             raise ValueError("engine 'dense' reads SearchRequest.dense "
                              "([B, D] query embeddings); got None")
-        import jax.numpy as jnp
-        ids, scores, scored = [], [], []
-        for q in dense:
-            vals, di, st = retrieve_dense(self.index, jnp.asarray(q),
-                                          params, k=k)
-            ids.append(di)
-            scores.append(vals)
-            scored.append(st["candidates_fully_scored"])
-        stats = {"candidates_fully_scored": np.asarray(scored, np.float32),
-                 "n_candidates": float(self.index.emb.shape[0])}
-        ids = np.stack(ids).astype(np.int32)
-        scores = np.stack(scores).astype(np.float32)
+        scores, ids, stats = retrieve_dense_batched(self.index, dense,
+                                                    params, k=k)
+        ids = ids.astype(np.int32)
+        scores = scores.astype(np.float32)
         return RetrievalResult(ids=ids, scores=scores, global_ids=ids,
                                local_ids=ids, stats=stats)
+
+    def replicate(self, params):
+        return type(self)(self.index, params)
 
 
 _HYBRID_FIRST_STAGES = ("batched", "kernel", "sequential", "sharded")
@@ -261,6 +286,18 @@ class _HybridBase:
         self.depth = int(depth)
         self.first = get_engine(first_stage)(self.hybrid.sparse, params,
                                              **opts)
+        # remembered for replicate(): the executor pool re-opens the same
+        # configuration over the shared HybridIndex
+        self._first_stage = first_stage
+        self._first_opts = dict(opts)
+
+    def replicate(self, params):
+        return type(self)(self.hybrid, params, depth=self.depth,
+                          first_stage=self._first_stage,
+                          **self._replicate_opts())
+
+    def _replicate_opts(self) -> dict:
+        return dict(self._first_opts)
 
     def _depth_for(self, k: int) -> int:
         """Candidate depth of one call: at least the configured k' and
@@ -316,6 +353,9 @@ class RRFEngine(_HybridBase):
         if rrf_k <= 0:
             raise ValueError(f"rrf_k={rrf_k} must be > 0")
         self.rrf_k = float(rrf_k)
+
+    def _replicate_opts(self) -> dict:
+        return {**self._first_opts, "rrf_k": self.rrf_k}
 
     def search(self, terms, weights_b, weights_l, dense, *, k, params):
         k1 = self._depth_for(k)

@@ -99,6 +99,21 @@ class Retriever:
     def engine_name(self) -> str:
         return self.engine.name
 
+    def replicate(self) -> "Retriever":
+        """A cheap serving replica: a fresh engine instance with the same
+        configuration **sharing the open index arrays** (no index
+        rebuild; the sharded engine hands over its partitioned tile
+        ranges). The executor pool clones one per worker so concurrent
+        batches never share a dispatch surface; jit caches are
+        process-global, so a warmed grid stays warm for every replica."""
+        replicate = getattr(self.engine, "replicate", None)
+        if replicate is None:
+            raise TypeError(
+                f"engine {self.engine_name!r} does not support replica "
+                f"cloning (no .replicate); executor pools need it")
+        return Retriever(replicate(self.params), self.params,
+                         k_buckets=self.k_buckets)
+
     def search(self, request: SearchRequest | None = None, *,
                terms=None, weights_b=None, weights_l=None, dense=None,
                k=None,

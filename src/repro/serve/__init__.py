@@ -1,9 +1,12 @@
 from .engine import (RetrievalServer, Request,  # noqa: F401
                      ServerConfig)
+from .executor import ExecutorPool  # noqa: F401
 from .router import (Route, RoutingPolicy, query_length, route,  # noqa: F401
-                     single_route, table8_policy)
-from .scheduler import (AsyncRetrievalScheduler, SchedulerConfig,  # noqa: F401
-                        SearchHandle, aggregate_latencies,
-                        mixed_request_stream, run_workload, truncate_terms)
+                     single_route, table8_policy, warmup_grid)
+from .scheduler import (ADMISSION_POLICIES,  # noqa: F401
+                        AsyncRetrievalScheduler, SchedulerConfig,
+                        SchedulerSaturated, SearchHandle,
+                        aggregate_latencies, mixed_request_stream,
+                        run_workload, truncate_terms)
 from .sharded import (ShardedRetrievalServer, make_shard_mesh,  # noqa: F401
                       shard_retrieve_batched)

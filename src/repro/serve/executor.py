@@ -1,0 +1,138 @@
+"""Executor pool: N concurrent batch executors over one scheduler.
+
+The layer between :meth:`AsyncRetrievalScheduler._pick_batch` and batch
+execution. Each executor is a worker thread holding its **own
+Retriever replica per route** (``Retriever.replicate()``: a fresh
+engine dispatch surface sharing the open index device arrays — no
+index rebuild, no re-partition), pulling picked micro-batches
+concurrently from the scheduler's (k-bucket x length-class) group
+queues. The scheduler stays the single source of truth: admission,
+grouping, deadlines, the response cache, and every counter live behind
+its lock; executors only race on *pick* (serialized by that same lock)
+and then run ``Retriever.search`` outside it.
+
+Why replicas at all, when jax jit caches are process-global? The
+compiled computations are shared — one warmup pass compiles the whole
+routing grid for every executor at once — but the *Python* dispatch
+path (engine objects, per-call state) is not designed for concurrent
+reuse; a replica per worker makes each batch's host-side path private
+by construction instead of by audit.
+
+Lifecycle: ``start()`` warms the full (route x k-bucket) grid via
+:meth:`AsyncRetrievalScheduler.warmup`, pre-builds every slot's replica
+map, then spawns the workers. ``close(drain=True)`` flips the stop
+flag and lets the executors themselves drain the group queues before
+exiting — close-time backlog still runs on all N replicas
+concurrently, and every outstanding ``SearchHandle`` resolves before
+``close`` returns.
+
+Determinism: N executors produce bit-identical responses to the
+single-worker path. A picked batch is an ordered list of whole
+requests executed in one ``search`` call; which *replica* runs it
+cannot change its result (same compiled computation, same index
+buffers), and the response cache stores per-request slices keyed on
+content, not on arrival interleaving.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class ExecutorPool:
+    """N worker threads executing a scheduler's picked micro-batches.
+
+    Built (and owned) by :meth:`AsyncRetrievalScheduler.start` when
+    ``SchedulerConfig.executors > 0``; usable standalone in tests via
+    ``ExecutorPool(scheduler, n).start()``.
+    """
+
+    def __init__(self, scheduler, n_executors: int, *,
+                 warmup: bool = True):
+        if n_executors < 1:
+            raise ValueError(
+                f"an ExecutorPool needs >= 1 executors, got {n_executors}")
+        self.scheduler = scheduler
+        self.n_executors = n_executors
+        self._do_warmup = warmup
+        self._threads: list[threading.Thread] = []
+        # slot -> {route_name: Retriever replica}; built at start() so
+        # the first picked batch never pays replication, extended lazily
+        # by _execute if a route first appears after start
+        self.replicas: dict[int, dict] = {}
+        self._stop = False
+        self._drain = True
+
+    def is_running(self) -> bool:
+        return any(t.is_alive() for t in self._threads)
+
+    def start(self) -> "ExecutorPool":
+        """Warm the routing grid, build per-slot replicas, spawn workers
+        (idempotent while running)."""
+        if self.is_running():
+            return self
+        sched = self.scheduler
+        if self._do_warmup:
+            sched.warmup()
+        for slot in range(self.n_executors):
+            self.replicas[slot] = {
+                r.name: sched._retriever(r.name).replicate()
+                for r in sched.routing.routes}
+        self._stop = False
+        self._drain = True
+        self._threads = [
+            threading.Thread(target=self._run, args=(slot,),
+                             name=f"retrieval-executor-{slot}", daemon=True)
+            for slot in range(self.n_executors)]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the workers. ``drain=True`` (default) has them empty the
+        group queues first — deadlines are waived, every pending request
+        executes, all handles resolve — before the threads exit."""
+        sched = self.scheduler
+        with sched._cond:
+            self._stop = True
+            self._drain = drain
+            sched._cond.notify_all()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def _run(self, slot: int) -> None:
+        """One executor's loop: pick a due batch (under the scheduler
+        lock), execute it on this slot's replicas (outside it), repeat;
+        park on the condition until the next deadline when idle."""
+        sched = self.scheduler
+        retrievers = self.replicas.setdefault(slot, {})
+        while True:
+            force = False
+            with sched._cond:
+                if self._stop:
+                    if not self._drain or not sched._groups:
+                        return
+                    force = True   # drain: waive deadlines, take the rest
+            picked = sched._pick_batch(time.perf_counter(), force)
+            if picked is None:
+                with sched._cond:
+                    if self._stop:
+                        if not self._drain or not sched._groups:
+                            return
+                        continue   # another slot is mid-pick; retry
+                    deadlines = [e.deadline
+                                 for g in sched._groups.values() for e in g]
+                    wait = 0.05
+                    if deadlines:
+                        wait = min(wait, min(deadlines) -
+                                   time.perf_counter())
+                    sched._cond.wait(timeout=max(wait, 1e-3))
+                continue
+            try:
+                sched._execute(*picked, retrievers=retrievers,
+                               executor_id=slot)
+            except Exception:
+                # the batch's handles were already failed by _execute;
+                # this executor must keep serving everyone else
+                pass

@@ -117,6 +117,20 @@ class RoutingPolicy:
         return hashlib.sha1(blob).hexdigest()[:16]
 
 
+def warmup_grid(policy: RoutingPolicy, k_buckets,
+                default_pad_terms: int) -> tuple:
+    """The serving compile grid: one ``(route, width, k_bucket)`` cell
+    per (length-class x k-bucket) pair, with the static query width that
+    class executes at. Executor warmup runs one zero-weight no-op batch
+    per cell so the first real request of any group never pays a trace;
+    the compile-discipline tests pin the jitted traversal's
+    ``_cache_size()`` growth to ``len(warmup_grid(...))``."""
+    buckets = tuple(k_buckets) if k_buckets else ()
+    return tuple(
+        (r, r.pad_terms if r.pad_terms is not None else default_pad_terms, b)
+        for r in policy.routes for b in buckets)
+
+
 def query_length(weights_b, weights_l) -> int:
     """Live-term count of one query: terms whose combined weight is
     nonzero (zero-weight padding scores as a no-op everywhere)."""

@@ -52,7 +52,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import heapq
 import itertools
 import math
 import threading
@@ -64,7 +63,19 @@ import numpy as np
 from ..core.twolevel import TwoLevelParams, resolve_k
 from ..retrieval import (K_BUCKETS, Retriever, SearchRequest,
                          SearchResponse, bucket_k, resolve_ks)
-from .router import RoutingPolicy, query_length, single_route
+from .router import (RoutingPolicy, query_length, single_route,
+                     warmup_grid)
+
+
+ADMISSION_POLICIES = ("block", "reject", "shed")
+
+
+class SchedulerSaturated(RuntimeError):
+    """The bounded admission queue is full. Raised by ``submit`` under
+    ``admission_policy="reject"`` (and for a submission that loses the
+    priority comparison under ``"shed"``); delivered through
+    ``SearchHandle.result()`` for a queued request that was load-shed to
+    admit a more important one."""
 
 
 @dataclasses.dataclass
@@ -76,6 +87,26 @@ class SchedulerConfig:
     # group compiles exactly once regardless of fill level
     pad_batch: bool = True
     cache_size: int = 256      # LRU response-cache entries; 0 disables
+    # -- executor pool / backpressure (serve.executor) ----------------------
+    # worker threads started by start(): 0 keeps the single dispatch
+    # worker; N >= 1 runs an ExecutorPool of N workers, each with its own
+    # Retriever replica per route, pulling micro-batches concurrently
+    executors: int = 0
+    # bounded admission: max queued rows (pending, not yet picked);
+    # 0 = unbounded. Saturation then degrades tail latency (or sheds)
+    # instead of growing MRT without bound for everyone.
+    admission_limit: int = 0
+    # what submit() does when the queue is full:
+    #   "block"  — wait for space (inline-drains in sync mode);
+    #   "reject" — raise SchedulerSaturated immediately;
+    #   "shed"   — drop the least-important queued request (by aged
+    #              priority; its handle fails with SchedulerSaturated)
+    #              if the new one outranks it, else refuse the new one.
+    admission_policy: str = "block"
+    # priority aging: a queued request gains one priority level per
+    # aging_ms waited, so strict priority cannot starve low-priority
+    # traffic under a saturating high-priority stream. 0 = strict.
+    aging_ms: float = 0.0
 
 
 def truncate_terms(terms, qw_b, qw_l, pad_terms: int,
@@ -180,9 +211,6 @@ class _Pending:
     ks: np.ndarray             # [r] int32 per-row depth
     cache_key: tuple | None
 
-    def __lt__(self, other):   # heap order: priority, then admission
-        return (self.priority, self.seq) < (other.priority, other.seq)
-
     @property
     def rows(self) -> int:
         return self.terms.shape[0]
@@ -205,22 +233,35 @@ class AsyncRetrievalScheduler:
         self.cfg = cfg if cfg is not None else SchedulerConfig()
         self.routing = routing if routing is not None else single_route()
         self.k_buckets = k_buckets
+        if self.cfg.admission_policy not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"admission_policy must be one of {ADMISSION_POLICIES}, "
+                f"got {self.cfg.admission_policy!r}")
+        if self.cfg.executors < 0:
+            raise ValueError(f"executors must be >= 0, "
+                             f"got {self.cfg.executors}")
         self._policy_fp = self.routing.fingerprint(self.params)
         self._retrievers: dict[str, Retriever] = {}
-        # (bucket, route_name, threshold_factor) -> heap of _Pending
+        # (bucket, route_name, threshold_factor) -> list of _Pending
+        # (ordered by aged priority at pick time, not at admission)
         self._groups: dict[tuple, list] = {}
         self._seq = itertools.count()
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._open_lock = threading.Lock()   # lazy Retriever.open guard
         self._thread: threading.Thread | None = None
+        self._pool = None                    # ExecutorPool when executors>0
         self._stop = False
         self._cache: OrderedDict = OrderedDict()
         self._counts = {"submitted": 0, "completed": 0, "failed": 0,
+                        "rejected": 0, "shed": 0, "in_flight": 0,
                         "batches": 0, "cache_hits": 0, "cache_misses": 0,
                         "rows_executed": 0, "rows_padding": 0}
         self._route_requests: dict[str, int] = {}
         self._group_batches: dict[str, int] = {}
+        self._executor_batches: dict[int, int] = {}
+        self._executor_rows: dict[int, int] = {}
+        self._warmup_s = 0.0
 
     # -- admission -----------------------------------------------------------
 
@@ -278,6 +319,11 @@ class AsyncRetrievalScheduler:
             # instead of thrashing a single slot
             key = (self._fingerprint(q_terms, qw_b, qw_l, tf),
                    self._policy_fp, bucket, ks.tobytes())
+        n_rows = q_terms.shape[0]
+        if 0 < self.cfg.admission_limit < n_rows:
+            raise ValueError(
+                f"request has {n_rows} rows > admission_limit="
+                f"{self.cfg.admission_limit}; it could never be admitted")
         with self._cond:
             self._counts["submitted"] += 1
             self._route_requests[route.name] = (
@@ -292,15 +338,92 @@ class AsyncRetrievalScheduler:
                                      t_done=now, cached=True)
                     return handle
                 self._counts["cache_misses"] += 1
-            entry = _Pending(
-                seq=next(self._seq), priority=priority,
-                deadline=now + self.cfg.max_wait_ms / 1e3, handle=handle,
-                terms=q_terms, qw_b=qw_b, qw_l=qw_l, ks=ks, cache_key=key)
-            heapq.heappush(
-                self._groups.setdefault((bucket, route.name, tf), []),
-                entry)
-            self._cond.notify_all()
+        entry = _Pending(
+            seq=next(self._seq), priority=priority,
+            deadline=now + self.cfg.max_wait_ms / 1e3, handle=handle,
+            terms=q_terms, qw_b=qw_b, qw_l=qw_l, ks=ks, cache_key=key)
+        self._admit(entry, (bucket, route.name, tf), now)
         return handle
+
+    # -- backpressure --------------------------------------------------------
+
+    def _aged_priority(self, priority: float, t_submit: float,
+                       now: float) -> float:
+        """Effective priority after aging: one level gained per
+        ``aging_ms`` waited (lower = more important). With aging off this
+        is the static priority — strict, starvation-prone ordering."""
+        if self.cfg.aging_ms <= 0:
+            return float(priority)
+        return priority - (now - t_submit) * 1e3 / self.cfg.aging_ms
+
+    def _pending_rows_locked(self) -> int:
+        return sum(e.rows for g in self._groups.values() for e in g)
+
+    def _admit(self, entry: _Pending, group_key: tuple, now: float) -> None:
+        """Enqueue under the bounded admission queue. "block" waits for
+        space (inline-draining when no worker runs, so a sync caller can
+        never deadlock itself); "reject" raises ``SchedulerSaturated``;
+        "shed" drops the least-important queued request — by *aged*
+        priority, newest first within a class — when the incoming one
+        outranks it, else refuses the incoming request."""
+        limit = self.cfg.admission_limit
+        while True:
+            with self._cond:
+                if limit <= 0 or (self._pending_rows_locked() + entry.rows
+                                  <= limit):
+                    self._groups.setdefault(group_key, []).append(entry)
+                    self._cond.notify_all()
+                    return
+                if self.cfg.admission_policy == "reject":
+                    self._counts["rejected"] += 1
+                    raise SchedulerSaturated(
+                        f"admission queue full ({limit} rows); request "
+                        f"rejected (priority {entry.priority})")
+                if self.cfg.admission_policy == "shed":
+                    self._shed_for_locked(entry, group_key, now)
+                    return
+                # "block": wait for the queue to drain
+                if self.is_running():
+                    self._cond.wait(timeout=0.05)
+                    continue
+            # sync mode, no worker to drain the queue: dispatch inline
+            # (outside the lock) and retry admission
+            self.poll(now=None, force=True)
+
+    def _shed_for_locked(self, entry: _Pending, group_key: tuple,
+                         now: float) -> None:
+        """Make room for ``entry`` by dropping least-important queued
+        requests, or refuse ``entry`` when it is itself the least
+        important. Victim handles fail with ``SchedulerSaturated``."""
+        limit = self.cfg.admission_limit
+        incoming = self._aged_priority(entry.priority,
+                                       entry.handle.t_submit, now)
+        while self._pending_rows_locked() + entry.rows > limit:
+            victim_key, victim = None, None
+            worst = (incoming, -1)
+            for gk, group in self._groups.items():
+                for e in group:
+                    aged = self._aged_priority(e.priority,
+                                               e.handle.t_submit, now)
+                    if (aged, e.seq) > worst:
+                        worst = (aged, e.seq)
+                        victim_key, victim = gk, e
+            if victim is None:
+                # the incoming request is the least important in sight
+                self._counts["rejected"] += 1
+                raise SchedulerSaturated(
+                    f"admission queue full ({limit} rows) of equal-or-"
+                    f"higher-priority requests; request shed at admission "
+                    f"(priority {entry.priority})")
+            self._groups[victim_key].remove(victim)
+            if not self._groups[victim_key]:
+                del self._groups[victim_key]
+            self._counts["shed"] += 1
+            victim.handle._fail(SchedulerSaturated(
+                f"request load-shed (aged priority {worst[0]:.2f}) to "
+                f"admit a higher-priority request"), t_done=now)
+        self._groups.setdefault(group_key, []).append(entry)
+        self._cond.notify_all()
 
     def _normalize_rows(self, request: SearchRequest):
         """Split a request into per-query (terms, qw_b, qw_l) rows — a
@@ -416,19 +539,35 @@ class AsyncRetrievalScheduler:
             if due_key is None:
                 return None
             group = self._groups[due_key]
+            # aged priority decides dispatch order *at pick time* (a
+            # static heap order could not model aging); FIFO within a
+            # level via seq
+            group.sort(key=lambda e: (
+                self._aged_priority(e.priority, e.handle.t_submit, now),
+                e.seq))
             batch, rows = [], 0
             while group and (not batch
                              or rows + group[0].rows <= self.cfg.max_batch):
-                e = heapq.heappop(group)
+                e = group.pop(0)
                 batch.append(e)
                 rows += e.rows
             if not group:
                 del self._groups[due_key]
+            self._counts["in_flight"] += len(batch)
+            # picked rows free admission-queue space: wake blocked submitters
+            self._cond.notify_all()
             return due_key, batch
 
-    def _execute(self, key: tuple, batch: list) -> int:
+    def _execute(self, key: tuple, batch: list, *,
+                 retrievers: dict | None = None,
+                 executor_id: int | None = None) -> int:
+        """Run one picked batch. ``retrievers`` lets an executor slot
+        substitute its own replica map for the shared one; the pool tags
+        ``executor_id`` so per-executor batch/row counters aggregate in
+        ``stats()``."""
         try:
-            return self._execute_inner(key, batch)
+            return self._execute_inner(key, batch, retrievers=retrievers,
+                                       executor_id=executor_id)
         except Exception as exc:
             # the entries were already popped from their group — deliver
             # the failure to every handle so no caller blocks forever,
@@ -437,13 +576,22 @@ class AsyncRetrievalScheduler:
             with self._cond:
                 self._counts["failed"] = (
                     self._counts.get("failed", 0) + len(batch))
+                self._counts["in_flight"] -= len(batch)
                 for e in batch:
                     e.handle._fail(exc, t_done)
             raise
 
-    def _execute_inner(self, key: tuple, batch: list) -> int:
+    def _execute_inner(self, key: tuple, batch: list, *,
+                       retrievers: dict | None = None,
+                       executor_id: int | None = None) -> int:
         bucket, route_name, tf = key
-        retr = self._retriever(route_name)
+        if retrievers is None:
+            retr = self._retriever(route_name)
+        else:
+            retr = retrievers.get(route_name)
+            if retr is None:
+                retr = self._retriever(route_name).replicate()
+                retrievers[route_name] = retr
         terms = np.concatenate([e.terms for e in batch])
         qw_b = np.concatenate([e.qw_b for e in batch])
         qw_l = np.concatenate([e.qw_l for e in batch])
@@ -469,8 +617,14 @@ class AsyncRetrievalScheduler:
             self._counts["batches"] += 1
             self._counts["rows_executed"] += n_real
             self._counts["rows_padding"] += n_pad
+            self._counts["in_flight"] -= len(batch)
             gname = f"k{bucket}/{route_name}"
             self._group_batches[gname] = self._group_batches.get(gname, 0) + 1
+            if executor_id is not None:
+                self._executor_batches[executor_id] = (
+                    self._executor_batches.get(executor_id, 0) + 1)
+                self._executor_rows[executor_id] = (
+                    self._executor_rows.get(executor_id, 0) + n_real)
             for e in batch:
                 rows = slice(row0, row0 + e.rows)
                 row0 += e.rows
@@ -519,16 +673,53 @@ class AsyncRetrievalScheduler:
                          else v)
         return out
 
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self, buckets=None) -> float:
+        """Pre-compile the full serving grid — one zero-weight no-op
+        batch per ``warmup_grid`` cell (route x k-bucket), at the
+        route's static ``[max_batch, width]`` shape — so the first real
+        request of *any* group never pays a trace. jit caches are
+        process-global, so one pass warms every executor replica at
+        once. Returns the wall-seconds spent (cumulative; also surfaced
+        as ``warmup_s`` in ``stats()``)."""
+        t0 = time.perf_counter()
+        if buckets is None:
+            buckets = (self.k_buckets if self.k_buckets
+                       else (resolve_k(self.params, None),))
+        for route, width, bucket in warmup_grid(
+                self.routing, buckets, self.cfg.pad_terms):
+            retr = self._retriever(route.name)
+            b = self.cfg.max_batch
+            zero_w = np.zeros((b, width), np.float32)
+            retr.search(terms=np.zeros((b, width), np.int32),
+                        weights_b=zero_w, weights_l=zero_w,
+                        k=np.full(b, bucket, np.int32))
+        self._warmup_s += time.perf_counter() - t0
+        return self._warmup_s
+
     # -- stats / cache -------------------------------------------------------
 
     def stats(self) -> dict:
         """Serving counters: submissions, batches, cache hits/misses,
-        per-route request counts and per-(bucket x class) batch counts."""
+        per-route request counts, per-(bucket x class) and per-executor
+        batch counts. The whole snapshot is read under the scheduler
+        lock and returned as a detached dict (nested dicts copied), so
+        a reader racing N executor threads sees one consistent moment:
+        ``submitted == completed + failed + shed + rejected + pending +
+        in_flight`` holds in every snapshot."""
         with self._lock:
-            return {**self._counts, "cache_entries": len(self._cache),
+            counts = dict(self._counts)
+            return {**counts,
+                    "admitted": counts["submitted"] - counts["rejected"],
+                    "warmup_s": self._warmup_s,
+                    "cache_entries": len(self._cache),
                     "pending": sum(len(g) for g in self._groups.values()),
+                    "pending_rows": self._pending_rows_locked(),
                     "requests_by_route": dict(self._route_requests),
-                    "batches_by_group": dict(self._group_batches)}
+                    "batches_by_group": dict(self._group_batches),
+                    "batches_by_executor": dict(self._executor_batches),
+                    "rows_by_executor": dict(self._executor_rows)}
 
     def cache_clear(self) -> None:
         with self._lock:
@@ -537,20 +728,37 @@ class AsyncRetrievalScheduler:
     # -- threaded mode -------------------------------------------------------
 
     def is_running(self) -> bool:
+        if self._pool is not None and self._pool.is_running():
+            return True
         return self._thread is not None and self._thread.is_alive()
 
     def start(self) -> "AsyncRetrievalScheduler":
-        """Run the background dispatch worker (idempotent)."""
+        """Run the background dispatch machinery (idempotent): the
+        single worker thread, or — with ``cfg.executors > 0`` — an
+        :class:`~repro.serve.executor.ExecutorPool` of N workers, each
+        holding its own Retriever replica per route, warmed over the
+        routing grid before any of them serves a request."""
         if self.is_running():
             return self
         self._stop = False
+        if self.cfg.executors > 0:
+            from .executor import ExecutorPool  # avoid an import cycle
+            self._pool = ExecutorPool(self, self.cfg.executors)
+            self._pool.start()
+            return self
         self._thread = threading.Thread(
             target=self._worker, name="retrieval-scheduler", daemon=True)
         self._thread.start()
         return self
 
     def close(self, flush: bool = True) -> None:
-        """Stop the worker; by default drain whatever is still queued."""
+        """Stop the worker(s); by default drain whatever is still
+        queued — with a pool, the executors themselves drain the group
+        queues before exiting, so close-time work still runs on every
+        replica concurrently."""
+        if self._pool is not None:
+            self._pool.close(drain=flush)
+            self._pool = None
         if self._thread is not None:
             with self._cond:
                 self._stop = True
@@ -634,12 +842,18 @@ def run_workload(scheduler: AsyncRetrievalScheduler,
                  requests: list, qps: float, seed: int = 0,
                  priorities=None) -> dict:
     """Open-loop Poisson driver: submit ``requests`` (SearchRequests) at
-    exponential inter-arrival times and poll the scheduler inline —
-    single-host synchronous serving, the regime the paper's MRT/P99
-    tables use. Latency is admission -> completion per handle, so it
-    includes batching delay; cache hits complete with zero service time
-    and are clamped at 0 (never negative, never NaN, never dropped).
-    Returns latency aggregates plus ``scheduler.stats()``.
+    exponential inter-arrival times — single-host serving, the regime
+    the paper's MRT/P99 tables use. With no worker running it polls the
+    scheduler inline (deterministic sync mode); with ``start()`` active
+    (single worker or executor pool) it only submits and then blocks on
+    the handles, so dispatch concurrency is whatever the scheduler
+    runs. Latency is admission -> completion per handle, so it includes
+    batching delay; cache hits complete with zero service time and are
+    clamped at 0 (never negative, never NaN, never dropped). Requests
+    refused at admission (``SchedulerSaturated``) and load-shed victims
+    are excluded from the latency aggregates but appear in the returned
+    ``stats()`` counters. Returns latency aggregates plus
+    ``scheduler.stats()``.
     """
     if not requests:
         return {"n": 0, "mrt_ms": math.nan, "p50_ms": math.nan,
@@ -647,16 +861,26 @@ def run_workload(scheduler: AsyncRetrievalScheduler,
                 **scheduler.stats()}
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / qps, len(requests)))
+    threaded = scheduler.is_running()
     t0 = time.perf_counter()
     handles = []
     i, n = 0, len(requests)
-    while i < n or scheduler.pending_count():
+    while i < n or (not threaded and scheduler.pending_count()):
         now = time.perf_counter() - t0
         while i < n and arrivals[i] <= now:
             pr = 0 if priorities is None else int(priorities[i])
-            handles.append(scheduler.submit(requests[i], priority=pr,
-                                            now=t0 + arrivals[i]))
+            try:
+                handles.append(scheduler.submit(requests[i], priority=pr,
+                                                now=t0 + arrivals[i]))
+            except SchedulerSaturated:
+                pass  # rejected at admission; counted in stats()
             i += 1
+        if threaded:
+            # the worker(s) dispatch; just pace the arrivals
+            if i < n:
+                time.sleep(max(0.0,
+                               t0 + arrivals[i] - time.perf_counter()))
+            continue
         # a failing batch resolves its own handles (and is popped from
         # its group, so draining terminates); one bad route must not
         # abort the measurement for every other request
@@ -671,6 +895,12 @@ def run_workload(scheduler: AsyncRetrievalScheduler,
             if dl is not None:
                 nxt = min(nxt, dl)
             time.sleep(max(0.0, nxt - time.perf_counter()))
+    if threaded:
+        for h in handles:
+            try:
+                h.result(timeout=120.0)
+            except Exception:
+                pass  # failures/sheds surface via stats and are filtered
     wall = time.perf_counter() - t0
     served = [h.latency_ms for h in handles if h._exception is None]
     return {**aggregate_latencies(served, wall), **scheduler.stats()}

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.dense_guided import (build_dense_index, exhaustive_dense,
-                                     retrieve_dense)
+                                     retrieve_dense, retrieve_dense_batched)
 from repro.core.twolevel import TwoLevelParams
 
 
@@ -107,6 +107,52 @@ def test_dense_engine_guided_dominated_by_exhaustive(dense_index, alpha,
         assert np.all(got <= np.asarray(ev) + 1e-5)
         assert np.all(np.diff(got) <= 1e-6)    # sorted descending
         assert np.all(resp.ids[qi] >= 0)
+
+
+@pytest.mark.parametrize("alpha,beta", [(0.0, 0.0), (1.0, 0.3)])
+def test_batched_lane_matches_per_query(dense_index, alpha, beta):
+    """The jitted [B, D] lane (vmap over the guided scan) must reproduce
+    the per-query path — each row keeps its own block order and
+    thresholds. Matched to float tolerance, not bit-exactly: vmap
+    changes XLA's dot-product reduction order, so scores differ at the
+    last ulp (and equal-score neighbors may swap ranks)."""
+    p = TwoLevelParams(alpha=alpha, beta=beta, gamma=0.0)
+    q = _query_batch(4)
+    bv, bi, bst = retrieve_dense_batched(dense_index, q, p, k=10)
+    assert bv.shape == bi.shape == (4, 10)
+    assert bst["candidates_fully_scored"].shape == (4,)
+    for qi in range(4):
+        vals, ids, st = retrieve_dense(dense_index, q[qi], p, k=10)
+        np.testing.assert_allclose(bv[qi], vals, rtol=1e-5, atol=1e-5)
+        # ids may swap only across near-tied adjacent scores
+        overlap = len(set(bi[qi].tolist()) & set(ids.tolist()))
+        assert overlap >= 9, (bi[qi], ids)
+        assert bst["candidates_fully_scored"][qi] == pytest.approx(
+            st["candidates_fully_scored"], abs=16)
+
+
+def test_batched_lane_rejects_single_queries(dense_index):
+    with pytest.raises(ValueError, match=r"\[B, D\]"):
+        retrieve_dense_batched(dense_index, _query(0),
+                               TwoLevelParams(), k=10)
+
+
+def test_dense_engine_compiles_once_per_batch_shape(dense_index):
+    """The dense registry engine serves a [B, D] batch in one jitted
+    call: repeated searches at the same (B, k) add no cache entries."""
+    from repro.core.dense_guided import _retrieve_dense_batched_impl
+    from repro.retrieval import Retriever
+    r = Retriever.open(dense_index, TwoLevelParams(alpha=0.0, beta=0.0,
+                                                   gamma=0.0),
+                       engine="dense")
+    r.search(dense=_query_batch(4), k=10)
+    n0 = _retrieve_dense_batched_impl._cache_size()
+    for seed in range(3):
+        rng = np.random.default_rng(100 + seed)
+        q = rng.standard_normal((4, 64)).astype(np.float32)
+        r.search(dense=jnp.asarray(q / np.linalg.norm(q, axis=1,
+                                                      keepdims=True)), k=10)
+    assert _retrieve_dense_batched_impl._cache_size() == n0
 
 
 def test_dense_engine_requires_dense_queries(dense_index):

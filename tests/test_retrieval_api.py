@@ -198,8 +198,18 @@ def test_dense_matches_legacy():
         for i, q in enumerate(qs):
             vals, ids, _ = retrieve_dense(index, jnp.asarray(q), params,
                                           k=10)
-            np.testing.assert_array_equal(resp.ids[i], ids)
-            np.testing.assert_array_equal(resp.scores[i], vals)
+            # the engine's batched lane vmaps the guided scan, which
+            # reorders XLA's dot-product reductions: scores agree to
+            # float tolerance, and ids may swap only across near-ties
+            np.testing.assert_allclose(resp.scores[i], vals,
+                                       rtol=1e-5, atol=1e-5)
+            mism = resp.ids[i] != ids
+            if mism.any():
+                tied = np.zeros_like(mism)
+                close = np.abs(np.diff(vals)) < 1e-5
+                tied[1:] |= close
+                tied[:-1] |= close
+                assert mism[~tied].sum() == 0, (resp.ids[i], ids)
 
 
 # -- per-call knobs -----------------------------------------------------------
