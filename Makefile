@@ -6,7 +6,7 @@ PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
 .PHONY: test test-fast test-slow test-api test-serve test-stress \
     test-traversal \
-        test-quality tier1 bench-smoke
+        test-quality test-index tier1 bench-smoke
 
 test: test-fast test-slow
 
@@ -52,6 +52,15 @@ test-quality:
 	$(PYTEST) -m "not slow" tests/test_metrics.py tests/test_eval_harness.py \
 	    tests/test_hybrid_engines.py
 
+# Compressed-index lane: codec round-trips/bound-safety, q8 decode parity
+# across every engine, and the streaming builder's chunked-vs-oneshot +
+# kill-and-resume suite (the quickest signal when touching repro/index/,
+# data/builder.py, or the q8 decode in kernels/guided_score.py). The
+# 2^20-doc build runs in the slow lane (`-m slow tests/test_builder.py`).
+test-index:
+	$(PYTEST) -m "not slow" tests/test_index_codec.py \
+	    tests/test_compressed_index.py tests/test_builder.py
+
 # The exact tier-1 command from ROADMAP.md (everything, fail-fast).
 tier1:
 	$(PYTEST) -x
@@ -60,11 +69,14 @@ tier1:
 # the retrieval perf baseline (BENCH_retrieval.json: mrt_ms,
 # tiles_visited, chunks_dispatched per method), the Poisson-load
 # serving benchmark (BENCH_serving.json: QPS/MRT/P99 + cache-hit and
-# routing stats per policy), and the relevance grid (BENCH_quality.json:
-# MRR/nDCG/recall next to MRT per method x threshold_factor x engine)
-# for later PRs to diff.
+# routing stats per policy), the relevance grid (BENCH_quality.json:
+# MRR/nDCG/recall next to MRT per method x threshold_factor x engine),
+# and the compressed-index smoke (size ratio / build rate / chunked MRT
+# at 64k docs; the committed BENCH_index.json is the 2^20-doc run —
+# re-record with REPRO_BENCH_FULL=1 or --full) for later PRs to diff.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.sharded_scaling --smoke
 	PYTHONPATH=src $(PY) -m benchmarks.retrieval_smoke
 	PYTHONPATH=src $(PY) -m benchmarks.serving_bench
 	PYTHONPATH=src $(PY) -m benchmarks.quality_bench
+	PYTHONPATH=src $(PY) -m benchmarks.million_doc --out /tmp/BENCH_index_smoke.json

@@ -1,0 +1,192 @@
+"""Million-document compressed-index benchmark: size, build, traversal.
+
+    PYTHONPATH=src python -m benchmarks.million_doc [--out PATH] [--full]
+
+Streams a synthetic corpus chunk-by-chunk through
+``repro.data.StreamingIndexBuilder`` (peak memory = one chunk) and
+records into ``BENCH_index.json``:
+
+- ``size``: compressed bytes/doc vs the analytic fp32 BII bytes/doc for
+  the same postings (``CompressedImpactIndex.fp32_nbytes``) and their
+  ratio — the headline "<25% of fp32" number;
+- ``build``: docs/s for a cold build and for a resumed build (first half
+  of the chunks already on disk — measures the idempotent-skip replay);
+- ``mrt``: chunked-traversal mean response time on the compressed index
+  (decode-on-gather jnp path; the in-kernel decode is pinned for parity
+  at small scale in tests — its tri-matmul cumsum scratch does not pay
+  at benchmark pad_len on CPU).
+
+Default is a seconds-scale smoke config; ``--full`` (or env
+``REPRO_BENCH_FULL=1``) runs the 2^20-doc corpus the acceptance ratio is
+pinned on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import twolevel
+from repro.core.traversal import retrieve_batched
+from repro.data import StreamingIndexBuilder, synthetic_chunk_stream
+
+try:  # package-relative when driven by benchmarks.run
+    from .common import emit
+except ImportError:  # python -m benchmarks.million_doc
+    from benchmarks.common import emit
+
+# Corpus shape tuned so per-(term, tile) runs are dense enough for
+# narrow gap widths (steep Zipf head): the regime where delta+int8
+# clearly beats fp32 storage, as on real learned-sparse corpora.
+ZIPF_A = 1.2
+AVG_DOC_TERMS = 64
+N_TERMS = 256
+K = 10
+N_QUERIES = 8
+N_Q_TERMS = 8
+CHUNK_TILES = 8
+
+SMOKE = dict(n_chunks=4, chunk_docs=16384, tile_size=2048)
+FULL = dict(n_chunks=16, chunk_docs=65536, tile_size=8192)   # 2^20 docs
+
+
+def _stream(cfg, seed: int = 0, start_chunk: int = 0):
+    return synthetic_chunk_stream(
+        cfg["n_chunks"], cfg["chunk_docs"], N_TERMS,
+        avg_doc_terms=AVG_DOC_TERMS, seed=seed, start_chunk=start_chunk,
+        zipf_a=ZIPF_A)
+
+
+def _build(out_dir, cfg):
+    b = StreamingIndexBuilder(out_dir, n_terms=N_TERMS,
+                              tile_size=cfg["tile_size"],
+                              chunk_docs=cfg["chunk_docs"])
+    for ch in _stream(cfg):
+        b.add_chunk(ch)
+    return b
+
+
+def _queries(rng):
+    # mid-band terms (informative, non-empty), impact-style weights
+    band = np.arange(4, N_TERMS // 2)
+    q = np.stack([rng.choice(band, size=N_Q_TERMS, replace=False)
+                  for _ in range(N_QUERIES)]).astype(np.int32)
+    qw_l = (1.0 + rng.gamma(2.0, 0.5, size=q.shape)).astype(np.float32)
+    qw_b = np.ones_like(qw_l)
+    return q, qw_b, qw_l
+
+
+def collect(full: bool) -> dict:
+    cfg = FULL if full else SMOKE
+    n_docs = cfg["n_chunks"] * cfg["chunk_docs"]
+
+    with tempfile.TemporaryDirectory() as d:
+        # cold build: every chunk generated + encoded + spilled
+        t0 = time.perf_counter()
+        builder = _build(pathlib.Path(d) / "cold", cfg)
+        build_s = time.perf_counter() - t0
+        index = builder.finalize()
+
+        # resumed build: first half already on disk; the replay skips
+        # them (manifest hit, no generation for skipped ids) and encodes
+        # the rest — the kill-and-resume wall-clock a restart pays
+        half = pathlib.Path(d) / "resume"
+        b = StreamingIndexBuilder(half, n_terms=N_TERMS,
+                                  tile_size=cfg["tile_size"],
+                                  chunk_docs=cfg["chunk_docs"])
+        for ch in _stream(cfg):
+            if ch.chunk_id >= cfg["n_chunks"] // 2:
+                break
+            b.add_chunk(ch)
+        t0 = time.perf_counter()
+        b2 = StreamingIndexBuilder(half, n_terms=N_TERMS,
+                                   tile_size=cfg["tile_size"],
+                                   chunk_docs=cfg["chunk_docs"])
+        done = set(b2.completed_chunks)
+        start = min(set(range(cfg["n_chunks"])) - done, default=0)
+        for ch in _stream(cfg, start_chunk=start):
+            b2.add_chunk(ch)
+        resume_s = time.perf_counter() - t0
+
+    nb = index.nbytes()
+    fp32 = index.fp32_nbytes()
+
+    # chunked-traversal MRT (decode-on-gather), compile excluded
+    q, qw_b, qw_l = _queries(np.random.default_rng(42))
+    params = twolevel.fast(chunk_tiles=CHUNK_TILES)
+    run = lambda: retrieve_batched(index, q, qw_b, qw_l, params, k=K,
+                                   traversal="chunked",
+                                   chunk_tiles=CHUNK_TILES)
+    run()                               # compile + first dispatch
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        resp = run()
+    mrt_ms = (time.perf_counter() - t0) / (reps * N_QUERIES) * 1e3
+
+    return {
+        "meta": {"mode": "full" if full else "smoke", "n_docs": n_docs,
+                 "n_terms": N_TERMS, "avg_doc_terms": AVG_DOC_TERMS,
+                 "zipf_a": ZIPF_A, "tile_size": cfg["tile_size"],
+                 "chunk_docs": cfg["chunk_docs"],
+                 "n_chunks": cfg["n_chunks"], "k": K,
+                 "n_queries": N_QUERIES, "chunk_tiles": CHUNK_TILES,
+                 "nnz": index.nnz, "pad_len": index.pad_len},
+        "size": {"bytes_per_doc": round(nb["total"] / n_docs, 2),
+                 "fp32_bytes_per_doc": round(fp32 / n_docs, 2),
+                 "ratio": round(nb["total"] / fp32, 4),
+                 "components": {k: v for k, v in nb.items()
+                                if k != "total"}},
+        "build": {"build_s": round(build_s, 2),
+                  "docs_per_s": round(n_docs / build_s),
+                  "resume_s": round(resume_s, 2),
+                  "docs_per_s_resume": round(n_docs / resume_s)},
+        "mrt": {"chunked_mrt_ms": round(mrt_ms, 3),
+                "tiles_visited": float(resp.stats["tiles_visited"].mean()),
+                "chunks_dispatched": float(
+                    resp.stats["chunks_dispatched"].mean()),
+                "n_chunks": float(resp.stats["n_chunks"].mean())},
+    }
+
+
+def _is_full(args_full: bool) -> bool:
+    return args_full or os.environ.get("REPRO_BENCH_FULL") == "1"
+
+
+def run(out) -> None:
+    data = collect(_is_full(False))
+    out(emit("million_doc/size", data["size"]["bytes_per_doc"],
+             {"ratio": data["size"]["ratio"],
+              "fp32_bytes_per_doc": data["size"]["fp32_bytes_per_doc"]}))
+    out(emit("million_doc/build", data["build"]["docs_per_s"],
+             {"docs_per_s_resume": data["build"]["docs_per_s_resume"]}))
+    out(emit("million_doc/mrt", data["mrt"]["chunked_mrt_ms"],
+             {"tiles_visited": data["mrt"]["tiles_visited"]}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_index.json)")
+    ap.add_argument("--full", action="store_true",
+                    help="run the 2^20-doc corpus (also REPRO_BENCH_FULL=1)")
+    args = ap.parse_args()
+    path = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_index.json")
+    data = collect(_is_full(args.full))
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    s, b, m = data["size"], data["build"], data["mrt"]
+    print(f"{data['meta']['n_docs']} docs: {s['bytes_per_doc']}B/doc vs "
+          f"fp32 {s['fp32_bytes_per_doc']}B/doc (ratio {s['ratio']:.3f}); "
+          f"build {b['docs_per_s']}/s cold, {b['docs_per_s_resume']}/s "
+          f"resumed; chunked MRT {m['chunked_mrt_ms']:.1f}ms")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,9 @@ THRESHOLD_FACTORS = (1.0, 3.0)
 ENGINES = (("sparse", "batched", {}),
            ("cascade", "cascade", {"depth": DEPTH}),
            ("rrf", "rrf", {"depth": DEPTH}))
+# first-stage candidate depths k' swept for the cascade frontier
+# (full mode only; lanes land under "cascade_frontier/d<k'>")
+CASCADE_DEPTHS = (20, 50, 100, 200)
 
 
 def collect(smoke: bool = False) -> dict:
@@ -89,6 +92,19 @@ def collect(smoke: bool = False) -> dict:
     lanes["dense_only"] = dict(
         evaluate_ranking(np.asarray(dense_ids), graded.qrels),
         engine="dense_topk", k=DEPTH, n_queries=n_queries)
+    if not smoke:
+        # cascade first-stage depth frontier: sweep the candidate depth
+        # k' the sparse stage hands to the exact dense rerank (fixed
+        # method/tf) — how shallow the first stage can go before quality
+        # falls off, against the MRT each depth pays
+        params = twolevel.fast()
+        for depth in CASCADE_DEPTHS:
+            r = Retriever.open(hybrid, params, engine="cascade",
+                               depth=depth)
+            row = evaluate_retriever(r, queries, graded.qrels, k=DEPTH,
+                                     threshold_factor=1.0, repeats=3)
+            row["first_stage_depth"] = depth
+            lanes[f"cascade_frontier/d{depth}"] = row
     return {"meta": {"corpus": "splade_like+graded", "n_docs": N_DOCS,
                      "n_terms": N_TERMS, "n_queries": n_queries,
                      "dim": DIM, "tile_size": TILE, "k_headline": K,

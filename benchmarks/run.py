@@ -13,7 +13,7 @@ import time
 MODULES = ("figure1", "table2", "table3", "table4", "figure3",
            "table6_suite", "table7_bmw", "table8_qlen", "dense_transfer",
            "bench_kernels", "sharded_scaling", "retrieval_smoke",
-           "serving_bench", "quality_bench", "roofline")
+           "serving_bench", "quality_bench", "roofline", "million_doc")
 
 
 def main() -> None:

@@ -44,9 +44,18 @@ class BlockedImpactIndex:
     # orig_of_new[new_id] = original docid, or None for identity.
     orig_of_new: np.ndarray | None = None
 
+    # Static tag dispatched on by the traversal executors (see
+    # ``dispatch_gather``). The compressed index reports "q8".
+    gather_kind = "fp32"
+
     @property
     def nnz(self) -> int:
         return int(self.docids.shape[0])
+
+    def gather_arrays(self) -> tuple[jax.Array, ...]:
+        """Posting-side arrays consumed by ``dispatch_gather`` — the
+        per-kind payload the executors thread through jit as a pytree."""
+        return (self.docids, self.w_b, self.w_l, self.tile_ptr)
 
     def to_orig(self, ids: np.ndarray) -> np.ndarray:
         """Map internal docids back to original ids (-1 passes through)."""
@@ -70,13 +79,16 @@ def impact_doc_order(merged: MergedPostings) -> np.ndarray:
     return np.argsort(-mass, kind="stable").astype(np.int32)
 
 
-def build_index(merged: MergedPostings, tile_size: int = 2048,
-                pad_multiple: int = 8, pad_cap: int | None = None,
-                doc_order: np.ndarray | None = None) -> BlockedImpactIndex:
-    """Build the BII from merged postings (host-side numpy).
+def blocked_layout(merged: MergedPostings, tile_size: int = 2048,
+                   pad_multiple: int = 8, pad_cap: int | None = None,
+                   doc_order: np.ndarray | None = None) -> dict:
+    """Host-side tile layout shared by the fp32 and compressed builders.
 
-    ``doc_order`` (optional): permutation; new docid i <- original
-    doc_order[i]. Results are mapped back via ``index.to_orig``.
+    Returns a dict of numpy arrays: the (optionally reordered) term-major
+    flat postings, ``tile_ptr``/``cnt``, exact per-(term, tile) and
+    per-term maxima, and ``pad_len``. ``build_index`` wraps this into
+    device arrays; ``repro.index.compress_index`` encodes the same
+    layout instead of materializing fp32 postings on device.
     """
     n_docs, n_terms = merged.n_docs, merged.n_terms
     n_tiles = -(-n_docs // tile_size)
@@ -128,15 +140,34 @@ def build_index(merged: MergedPostings, tile_size: int = 2048,
     np.maximum.at(sigma_b, term_of, w_b_arr)
     np.maximum.at(sigma_l, term_of, w_l_arr)
 
-    return BlockedImpactIndex(
+    return dict(
         n_docs=n_docs, n_terms=n_terms, tile_size=tile_size, n_tiles=n_tiles,
-        pad_len=pad_len,
-        docids=jnp.asarray(docids, dtype=jnp.int32),
-        w_b=jnp.asarray(w_b_arr), w_l=jnp.asarray(w_l_arr),
-        tile_ptr=jnp.asarray(tile_ptr),
-        tile_max_b=jnp.asarray(tm_b), tile_max_l=jnp.asarray(tm_l),
-        sigma_b=jnp.asarray(sigma_b), sigma_l=jnp.asarray(sigma_l),
+        pad_len=pad_len, docids=docids.astype(np.int32), w_b=w_b_arr,
+        w_l=w_l_arr, tile_ptr=tile_ptr, cnt=cnt, tile_max_b=tm_b,
+        tile_max_l=tm_l, sigma_b=sigma_b, sigma_l=sigma_l,
         orig_of_new=orig_of_new)
+
+
+def build_index(merged: MergedPostings, tile_size: int = 2048,
+                pad_multiple: int = 8, pad_cap: int | None = None,
+                doc_order: np.ndarray | None = None) -> BlockedImpactIndex:
+    """Build the BII from merged postings (host-side numpy).
+
+    ``doc_order`` (optional): permutation; new docid i <- original
+    doc_order[i]. Results are mapped back via ``index.to_orig``.
+    """
+    lay = blocked_layout(merged, tile_size, pad_multiple, pad_cap, doc_order)
+    return BlockedImpactIndex(
+        n_docs=lay["n_docs"], n_terms=lay["n_terms"], tile_size=tile_size,
+        n_tiles=lay["n_tiles"], pad_len=lay["pad_len"],
+        docids=jnp.asarray(lay["docids"], dtype=jnp.int32),
+        w_b=jnp.asarray(lay["w_b"]), w_l=jnp.asarray(lay["w_l"]),
+        tile_ptr=jnp.asarray(lay["tile_ptr"]),
+        tile_max_b=jnp.asarray(lay["tile_max_b"]),
+        tile_max_l=jnp.asarray(lay["tile_max_l"]),
+        sigma_b=jnp.asarray(lay["sigma_b"]),
+        sigma_l=jnp.asarray(lay["sigma_l"]),
+        orig_of_new=lay["orig_of_new"])
 
 
 @partial(jax.jit, static_argnames=("pad_len", "tile_size"))
@@ -166,3 +197,25 @@ def gather_tile(docids: jax.Array, w_b: jax.Array, w_l: jax.Array,
     if qw_l is not None:
         wl = wl * qw_l[:, None]
     return offs, wb, wl
+
+
+def dispatch_gather(kind: str, gt: tuple, q_terms: jax.Array,
+                    tile: jax.Array, qw_b: jax.Array | None = None,
+                    qw_l: jax.Array | None = None, *, pad_len: int,
+                    tile_size: int):
+    """Kind-polymorphic tile gather.
+
+    ``kind`` is the index's static ``gather_kind`` ("fp32" | "q8") and
+    ``gt`` its ``gather_arrays()`` tuple. Both index types decode to the
+    same (offs, wb, wl) padded-run contract, so every executor above
+    this call is codec-agnostic. Called inside jit with ``kind`` static.
+    """
+    if kind == "fp32":
+        docids, w_b, w_l, tile_ptr = gt
+        return gather_tile(docids, w_b, w_l, tile_ptr, q_terms, tile,
+                           qw_b, qw_l, pad_len=pad_len, tile_size=tile_size)
+    if kind == "q8":
+        from ..index.compressed import gather_tile_q
+        return gather_tile_q(gt, q_terms, tile, qw_b, qw_l,
+                             pad_len=pad_len, tile_size=tile_size)
+    raise ValueError(f"unknown gather kind: {kind!r}")

@@ -10,6 +10,16 @@ static shape — ``tiles_per_shard`` tiles, ``max_nnz`` postings — and
 stacked on a leading shard axis, so the stack maps directly onto a mesh
 axis via ``shard_map`` (or a ``vmap`` emulation on one device).
 
+Both index kinds shard: the fp32 ``BlockedImpactIndex`` and the
+``repro.index.CompressedImpactIndex``. The posting payload is carried as
+the index's ``gather_arrays()`` tuple with every leaf stacked on the
+shard axis (``gather_kind`` tags the layout). Compressed runs need no
+value rebase — delta gaps and the per-run first offset are tile-local,
+so sharding only re-bases the two CSR pointer grids (``tile_ptr`` at
+posting granularity, ``pack_ptr`` at word granularity; runs are
+word-aligned, so word spans concatenate without re-packing) and slices
+the per-(term, tile) metadata columns.
+
 List-level maxima (``sigma_b``/``sigma_l``) stay *global* and replicated:
 every shard must sort query terms in the same order or the MaxScore
 partition — and therefore results — would diverge between shard counts.
@@ -31,7 +41,7 @@ from .index import BlockedImpactIndex
 
 @dataclasses.dataclass
 class ShardedImpactIndex:
-    """Stacked per-shard view of a BlockedImpactIndex (leading dim = shard)."""
+    """Stacked per-shard view of a blocked index (leading dim = shard)."""
     n_shards: int
     n_docs: int
     n_terms: int
@@ -42,15 +52,39 @@ class ShardedImpactIndex:
     doc_base: jax.Array     # [n_shards] int32 first internal docid per shard
     n_real_tiles: jax.Array  # [n_shards] int32 real tiles (rest is padding)
     nnz_per_shard: np.ndarray
-    docids: jax.Array       # [n_shards, max_nnz] int32 shard-local docids
-    w_b: jax.Array          # [n_shards, max_nnz] f32
-    w_l: jax.Array          # [n_shards, max_nnz] f32
-    tile_ptr: jax.Array     # [n_shards, n_terms, tiles_per_shard + 1] int32
+    # posting payload: the source index's gather_arrays() tuple, every
+    # leaf stacked on a leading shard axis and padded to a common shape
+    gather: tuple
+    gather_kind: str        # "fp32" | "q8" (static; threaded through jit)
     tile_max_b: jax.Array   # [n_shards, n_terms, tiles_per_shard] f32
     tile_max_l: jax.Array   # [n_shards, n_terms, tiles_per_shard] f32
     sigma_b: jax.Array      # [n_terms] f32 — global, replicated
     sigma_l: jax.Array      # [n_terms] f32 — global, replicated
     orig_of_new: np.ndarray | None = None
+
+    def _fp32_leaf(self, i: int) -> jax.Array:
+        if self.gather_kind != "fp32":
+            raise AttributeError(
+                "flat fp32 posting views are only defined for "
+                f"gather_kind='fp32' (this index is {self.gather_kind!r})")
+        return self.gather[i]
+
+    # fp32 back-compat views (pre-gather-tuple field names)
+    @property
+    def docids(self) -> jax.Array:
+        return self._fp32_leaf(0)
+
+    @property
+    def w_b(self) -> jax.Array:
+        return self._fp32_leaf(1)
+
+    @property
+    def w_l(self) -> jax.Array:
+        return self._fp32_leaf(2)
+
+    @property
+    def tile_ptr(self) -> jax.Array:
+        return self.gather[3]  # same slot in both layouts
 
     def to_orig(self, ids: np.ndarray) -> np.ndarray:
         """Map internal docids back to original ids (-1 passes through)."""
@@ -61,69 +95,122 @@ class ShardedImpactIndex:
         return np.where(ids < 0, ids, self.orig_of_new[safe]).astype(ids.dtype)
 
 
-def shard_index(index: BlockedImpactIndex, n_shards: int) -> ShardedImpactIndex:
-    """Partition ``index`` into ``n_shards`` contiguous tile ranges.
+def _csr_shard_gather(h_ptr: np.ndarray, t0: int, t1: int):
+    """Span bookkeeping for one shard of a [n_terms, n_tiles+1] CSR grid.
+
+    Returns (flat gather index into the flat payload, rebased local CSR
+    of shape [n_terms, t1-t0+1], per-term span lengths)."""
+    starts = h_ptr[:, t0].astype(np.int64)
+    ends = h_ptr[:, t1].astype(np.int64)
+    lens = ends - starts
+    total = int(lens.sum())
+    out_starts = np.zeros(len(lens) + 1, dtype=np.int64)
+    np.cumsum(lens, out=out_starts[1:])
+    flat = (np.arange(total, dtype=np.int64)
+            - np.repeat(out_starts[:-1], lens) + np.repeat(starts, lens))
+    local = (h_ptr[:, t0:t1 + 1].astype(np.int64)
+             - starts[:, None] + out_starts[:-1, None]).astype(np.int32)
+    return flat, local, out_starts
+
+
+def _pad_cols(a: np.ndarray, tps: int) -> np.ndarray:
+    """Zero-pad a sliced [n_terms, real] metadata grid to tps columns."""
+    if a.shape[1] == tps:
+        return a
+    out = np.zeros((a.shape[0], tps), dtype=a.dtype)
+    out[:, :a.shape[1]] = a
+    return out
+
+
+def _pad_ptr(lp: np.ndarray, tps: int) -> np.ndarray:
+    """Pad a rebased local CSR to tps+1 cols, repeating the last offset."""
+    n_terms, cols = lp.shape
+    out = np.empty((n_terms, tps + 1), dtype=np.int32)
+    out[:, :cols] = lp
+    out[:, cols:] = lp[:, -1:]
+    return out
+
+
+def _pad_flat(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    out = np.full(n, fill, dtype=a.dtype)
+    out[:len(a)] = a
+    return out
+
+
+def shard_index(index, n_shards: int) -> ShardedImpactIndex:
+    """Partition ``index`` (fp32 or compressed) into ``n_shards``
+    contiguous tile ranges.
 
     Host-side numpy re-pack; shards are padded to a common static shape so
     the result stacks on a leading shard axis.
     """
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    kind = index.gather_kind
     n_terms, n_tiles = index.n_terms, index.n_tiles
     tile_size = index.tile_size
     tps = -(-n_tiles // n_shards)  # ceil: padded tiles per shard
 
     h_ptr = np.asarray(index.tile_ptr)
-    h_docids = np.asarray(index.docids)
-    h_wb = np.asarray(index.w_b)
-    h_wl = np.asarray(index.w_l)
     h_tmb = np.asarray(index.tile_max_b)
     h_tml = np.asarray(index.tile_max_l)
+    if kind == "fp32":
+        h_docids = np.asarray(index.docids)
+        h_wb = np.asarray(index.w_b)
+        h_wl = np.asarray(index.w_l)
+    elif kind == "q8":
+        h_packed = np.asarray(index.packed)
+        h_qb = np.asarray(index.qb)
+        h_ql = np.asarray(index.ql)
+        h_pptr = np.asarray(index.pack_ptr)
+        h_grids = {n: np.asarray(getattr(index, n)) for n in
+                   ("width", "first", "scale_b", "zero_b",
+                    "scale_l", "zero_l")}
+    else:
+        raise ValueError(f"unknown gather kind: {kind!r}")
 
-    per_shard = []
+    shard_gather = []   # per-shard gather tuples (numpy)
+    tmb_l, tml_l, base_l = [], [], []
     nnz = np.zeros(n_shards, dtype=np.int64)
     for s in range(n_shards):
         t0 = min(s * tps, n_tiles)
         t1 = min((s + 1) * tps, n_tiles)
-        starts = h_ptr[:, t0].astype(np.int64)
-        ends = h_ptr[:, t1].astype(np.int64)
-        lens = ends - starts
-        total = int(lens.sum())
-        out_starts = np.zeros(n_terms + 1, dtype=np.int64)
-        np.cumsum(lens, out=out_starts[1:])
-        # gather each term's run for this tile range into one flat slab
-        flat = (np.arange(total, dtype=np.int64)
-                - np.repeat(out_starts[:-1], lens) + np.repeat(starts, lens))
-        local_doc = h_docids[flat].astype(np.int64) - t0 * tile_size
-        # rebase tile_ptr into the slab; pad tiles repeat the last offset
-        lp = np.empty((n_terms, tps + 1), dtype=np.int32)
-        real = t1 - t0
-        lp[:, :real + 1] = (h_ptr[:, t0:t1 + 1].astype(np.int64)
-                            - starts[:, None] + out_starts[:-1, None]
-                            ).astype(np.int32)
-        lp[:, real + 1:] = lp[:, real:real + 1]
+        flat, lp_real, _ = _csr_shard_gather(h_ptr, t0, t1)
+        lp = _pad_ptr(lp_real, tps)
+        nnz[s] = len(flat)
+        if kind == "fp32":
+            local_doc = (h_docids[flat].astype(np.int64)
+                         - t0 * tile_size).astype(np.int32)
+            shard_gather.append((local_doc, h_wb[flat], h_wl[flat], lp))
+        else:
+            wflat, lpw_real, _ = _csr_shard_gather(h_pptr, t0, t1)
+            lpw = _pad_ptr(lpw_real, tps)
+            shard_gather.append((
+                h_packed[wflat], h_qb[flat], h_ql[flat], lp, lpw,
+                *(_pad_cols(g[:, t0:t1], tps) for g in
+                  (h_grids["width"], h_grids["first"], h_grids["scale_b"],
+                   h_grids["zero_b"], h_grids["scale_l"],
+                   h_grids["zero_l"]))))
         tmb = np.zeros((n_terms, tps), dtype=np.float32)
         tml = np.zeros((n_terms, tps), dtype=np.float32)
-        tmb[:, :real] = h_tmb[:, t0:t1]
-        tml[:, :real] = h_tml[:, t0:t1]
-        nnz[s] = total
-        per_shard.append((local_doc.astype(np.int32), h_wb[flat], h_wl[flat],
-                          lp, tmb, tml, t0 * tile_size))
+        tmb[:, :t1 - t0] = h_tmb[:, t0:t1]
+        tml[:, :t1 - t0] = h_tml[:, t0:t1]
+        tmb_l.append(tmb)
+        tml_l.append(tml)
+        base_l.append(t0 * tile_size)
 
-    max_nnz = max(1, int(nnz.max()))
+    # pad every shard's flat leaves (postings, and words for q8) to the
+    # max length, then stack each gather slot on the shard axis
+    n_leaves = len(shard_gather[0])
+    flat_slots = (0, 1, 2) if kind == "fp32" else (0, 1, 2)
+    gather = []
+    for i in range(n_leaves):
+        leaves = [sg[i] for sg in shard_gather]
+        if i in flat_slots:
+            m = max(1, max(len(a) for a in leaves))
+            leaves = [_pad_flat(a, m) for a in leaves]
+        gather.append(jnp.asarray(np.stack(leaves)))
 
-    def pad_flat(a, fill):
-        out = np.full(max_nnz, fill, dtype=a.dtype)
-        out[:len(a)] = a
-        return out
-
-    docids = np.stack([pad_flat(p[0], 0) for p in per_shard])
-    w_b = np.stack([pad_flat(p[1], 0.0) for p in per_shard])
-    w_l = np.stack([pad_flat(p[2], 0.0) for p in per_shard])
-    tile_ptr = np.stack([p[3] for p in per_shard])
-    tile_max_b = np.stack([p[4] for p in per_shard])
-    tile_max_l = np.stack([p[5] for p in per_shard])
-    doc_base = np.array([p[6] for p in per_shard], dtype=np.int32)
     n_real = np.clip(n_tiles - tps * np.arange(n_shards), 0, tps
                      ).astype(np.int32)
 
@@ -131,10 +218,10 @@ def shard_index(index: BlockedImpactIndex, n_shards: int) -> ShardedImpactIndex:
         n_shards=n_shards, n_docs=index.n_docs, n_terms=n_terms,
         tile_size=tile_size, n_tiles=n_tiles, tiles_per_shard=tps,
         pad_len=index.pad_len,
-        doc_base=jnp.asarray(doc_base), n_real_tiles=jnp.asarray(n_real),
-        nnz_per_shard=nnz,
-        docids=jnp.asarray(docids), w_b=jnp.asarray(w_b),
-        w_l=jnp.asarray(w_l), tile_ptr=jnp.asarray(tile_ptr),
-        tile_max_b=jnp.asarray(tile_max_b), tile_max_l=jnp.asarray(tile_max_l),
+        doc_base=jnp.asarray(np.array(base_l, dtype=np.int32)),
+        n_real_tiles=jnp.asarray(n_real), nnz_per_shard=nnz,
+        gather=tuple(gather), gather_kind=kind,
+        tile_max_b=jnp.asarray(np.stack(tmb_l)),
+        tile_max_l=jnp.asarray(np.stack(tml_l)),
         sigma_b=index.sigma_b, sigma_l=index.sigma_l,
         orig_of_new=index.orig_of_new)

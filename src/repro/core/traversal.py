@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .index import BlockedImpactIndex, gather_tile
+from .index import BlockedImpactIndex, dispatch_gather, gather_tile
 from .plan import (QueryPlan, chunk_schedule, combine, essential_terms,
                    freeze_bounds, plan_query, term_bounds, tile_schedule,
                    tile_upper_bounds)
@@ -183,11 +183,47 @@ def _gather_tile(docids, w_b, w_l, tile_ptr, qt, qwb, qwl, tile,
                        pad_len=pad_len, tile_size=tile_size)
 
 
+def _score_tile_kernel_q(gt, plan: QueryPlan, tile, essential, prefix_beta,
+                         th_lo, alpha, beta, gamma,
+                         *, tile_size: int, pad_len: int, kq: int):
+    """Decode-in-kernel Pallas path for the compressed index: raw packed
+    rows go straight into ``guided_score_tile_q``, which delta-decodes the
+    offsets and dequantizes the impacts in VMEM before the shared scatter/
+    freeze passes. Same candidate contract as ``score_tile``; stats come
+    from the kernel's extra per-slot posting-count row (no host-side
+    decode, so decompression stays inside the memory-bound gather)."""
+    from ..index.compressed import gather_tile_q_raw
+    from ..kernels.guided_score import guided_score_tile_q
+    words, qb_row, ql_row, meta_i, meta_f = gather_tile_q_raw(
+        gt, plan.qt, tile, pad_len=pad_len)
+    out = guided_score_tile_q(
+        words, qb_row, ql_row, meta_i, meta_f, plan.qwb, plan.qwl,
+        essential.astype(jnp.float32), prefix_beta, th_lo,
+        alpha, beta, gamma, tile_size=tile_size, pad_len=pad_len,
+        block_s=min(512, tile_size))
+    g, l, r, eval_m, rank_m, slot_cnt = out
+    eval_mask = eval_m > 0
+    rank_mask = rank_m > 0
+    stats = jnp.stack([(slot_cnt > 0).sum().astype(jnp.float32),
+                       rank_m.sum(),
+                       (rank_mask & ~eval_mask).sum().astype(jnp.float32),
+                       slot_cnt.sum()])
+    return (_tile_topk(g, eval_mask, kq), _tile_topk(l, eval_mask, kq),
+            _tile_topk(r, rank_mask, kq), stats)
+
+
 def _tile_step(idx_arrays, plan: QueryPlan, carry, tile,
                alpha, beta, gamma, factor,
                *, k, kq, pad_len, tile_size, bound_mode, use_kernel=False,
-               th_floor=None, tile_valid=None):
+               gather_kind="fp32", th_floor=None, tile_valid=None):
     """One tile visit: plan bounds -> skip test -> score -> queue merge.
+
+    ``idx_arrays`` is ``(gather_tuple, tile_max_b, tile_max_l)`` — the
+    index's ``gather_arrays()`` payload plus the exact fp32 tile maxima;
+    ``gather_kind`` (static) selects the decoder, so the same step serves
+    the fp32 and compressed indexes. Planning reads only the exact maxima,
+    which both index types carry — bounds and skip decisions are
+    codec-independent by construction.
 
     ``th_floor`` (optional scalar) is an externally supplied lower bound on
     theta_Gl — the sharded path injects the exchanged global threshold here
@@ -198,7 +234,7 @@ def _tile_step(idx_arrays, plan: QueryPlan, carry, tile,
     sharded path marks its shape-padding tiles invalid so they never enter
     queues or stats and skip rates stay comparable across engines.
     """
-    docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l = idx_arrays
+    gt, tile_max_b, tile_max_l = idx_arrays
     (gv, gi, lv, li, rv, ri, st) = carry
     th_gl = gv[-1]
     if th_floor is not None:
@@ -214,13 +250,19 @@ def _tile_step(idx_arrays, plan: QueryPlan, carry, tile,
     essential = essential_terms(m_alpha, th_gl)
     prefix_beta = freeze_bounds(m_beta)
 
-    offs, wb, wl = _gather_tile(docids, w_b, w_l, tile_ptr,
-                                plan.qt, plan.qwb, plan.qwl,
-                                tile, pad_len=pad_len, tile_size=tile_size)
-    scorer = _score_tile_kernel if use_kernel else score_tile
-    g_c, l_c, r_c, stats = scorer(
-        offs, wb, wl, essential, prefix_beta, th_lo, alpha, beta, gamma,
-        tile_size=tile_size, kq=kq)
+    if use_kernel and gather_kind == "q8":
+        # compressed + kernel: decode happens inside the pallas_call
+        g_c, l_c, r_c, stats = _score_tile_kernel_q(
+            gt, plan, tile, essential, prefix_beta, th_lo,
+            alpha, beta, gamma, tile_size=tile_size, pad_len=pad_len, kq=kq)
+    else:
+        offs, wb, wl = dispatch_gather(gather_kind, gt, plan.qt, tile,
+                                       plan.qwb, plan.qwl,
+                                       pad_len=pad_len, tile_size=tile_size)
+        scorer = _score_tile_kernel if use_kernel else score_tile
+        g_c, l_c, r_c, stats = scorer(
+            offs, wb, wl, essential, prefix_beta, th_lo, alpha, beta, gamma,
+            tile_size=tile_size, kq=kq)
 
     base = tile * tile_size
 
@@ -298,9 +340,10 @@ def _chunk_while(advance, chunk_ub, carries, disp, th_floor, factor):
 def _chunk_step_fused(idx_arrays, plan, carry, tiles_chunk,
                       alpha, beta, gamma, factor, n_valid,
                       *, k, kq, pad_len, tile_size, bound_mode,
-                      th_floor=None):
+                      gather_kind="fp32", th_floor=None):
     """Advance one query's carry over one chunk via the multi-tile Pallas
-    ``guided_score_chunk`` kernel (one pallas_call per chunk).
+    ``guided_score_chunk`` kernel (one pallas_call per chunk; the ``_q``
+    decode-in-kernel variant when the index is compressed).
 
     The skip predicate, essential partition and freeze bounds for every
     tile in the chunk derive from the *chunk-start* thresholds (the carry
@@ -308,8 +351,8 @@ def _chunk_step_fused(idx_arrays, plan, carry, tiles_chunk,
     pruning, so rank-safe configs stay bound-exact; guided configs follow
     a slightly different (still bound-safe) threshold trajectory — the
     usual guided tolerance, pinned in test_traversal."""
-    from ..kernels.guided_score import guided_score_chunk
-    docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l = idx_arrays
+    from ..kernels.guided_score import guided_score_chunk, guided_score_chunk_q
+    gt, tile_max_b, tile_max_l = idx_arrays
     gv, gi, lv, li, rv, ri, st = carry
     th_gl = gv[-1]
     if th_floor is not None:
@@ -323,35 +366,52 @@ def _chunk_step_fused(idx_arrays, plan, carry, tiles_chunk,
     skip = (ub_gl <= th_gl) | (tiles_chunk >= n_valid)        # [C]
     essential = jax.vmap(essential_terms, in_axes=(0, None))(m_alpha, th_gl)
     prefix_beta = jax.vmap(freeze_bounds)(m_beta)
-    offs, wb, wl = jax.vmap(
-        lambda t: _gather_tile(docids, w_b, w_l, tile_ptr,
-                               plan.qt, plan.qwb, plan.qwl, t,
-                               pad_len=pad_len, tile_size=tile_size)
-    )(tiles_chunk)                                            # [C, Nq, P]
 
-    out = guided_score_chunk(offs, wb, wl, essential.astype(jnp.float32),
-                             prefix_beta, skip, th_lo, alpha, beta, gamma,
-                             tile_size=tile_size,
-                             block_s=min(512, tile_size))
+    if gather_kind == "q8":
+        from ..index.compressed import gather_tile_q_raw
+        words, qbr, qlr, meta_i, meta_f = jax.vmap(
+            lambda t: gather_tile_q_raw(gt, plan.qt, t, pad_len=pad_len)
+        )(tiles_chunk)
+        out = guided_score_chunk_q(
+            words, qbr, qlr, meta_i, meta_f, plan.qwb, plan.qwl,
+            essential.astype(jnp.float32), prefix_beta, skip, th_lo,
+            alpha, beta, gamma, tile_size=tile_size, pad_len=pad_len,
+            block_s=min(512, tile_size))
+        # posting presence/counts come from the kernel's 6th output row
+        slot_cnt = out[:, 5]                                  # [C, S]
+        present = (slot_cnt > 0).sum(1).astype(jnp.float32)
+        postings = slot_cnt.sum(1)
+    else:
+        docids, w_b, w_l, tile_ptr = gt
+        offs, wb, wl = jax.vmap(
+            lambda t: _gather_tile(docids, w_b, w_l, tile_ptr,
+                                   plan.qt, plan.qwb, plan.qwl, t,
+                                   pad_len=pad_len, tile_size=tile_size)
+        )(tiles_chunk)                                        # [C, Nq, P]
+        out = guided_score_chunk(offs, wb, wl, essential.astype(jnp.float32),
+                                 prefix_beta, skip, th_lo, alpha, beta, gamma,
+                                 tile_size=tile_size,
+                                 block_s=min(512, tile_size))
+        # Stats exactly as _score_tile_kernel derives them, chunk-vectorized:
+        # presence re-counted from the gathered offsets (one scatter/tile).
+        S = tile_size
+        valid = offs >= 0
+        offs_safe = jnp.where(valid, offs, S).astype(jnp.int32)
+
+        def present_one(v, o):
+            cnt = jax.ops.segment_sum(v.ravel().astype(jnp.float32),
+                                      o.ravel(), num_segments=S + 1)[:S]
+            return (cnt > 0).sum().astype(jnp.float32)
+        present = jax.vmap(present_one)(valid, offs_safe)
+        postings = valid.sum((1, 2)).astype(jnp.float32)
+
     g, l, r = out[:, 0], out[:, 1], out[:, 2]
     eval_mask = out[:, 3] > 0
     rank_mask = out[:, 4] > 0
-
-    # Stats exactly as _score_tile_kernel derives them, chunk-vectorized:
-    # presence re-counted from the gathered offsets (one scatter per tile).
-    S = tile_size
-    valid = offs >= 0
-    offs_safe = jnp.where(valid, offs, S).astype(jnp.int32)
-
-    def present_one(v, o):
-        cnt = jax.ops.segment_sum(v.ravel().astype(jnp.float32), o.ravel(),
-                                  num_segments=S + 1)[:S]
-        return (cnt > 0).sum().astype(jnp.float32)
-    present = jax.vmap(present_one)(valid, offs_safe)
     tile_stats = jnp.stack(
         [present, out[:, 4].sum(1),
          (rank_mask & ~eval_mask).sum(1).astype(jnp.float32),
-         valid.sum((1, 2)).astype(jnp.float32)], axis=1)      # [C, 4]
+         postings], axis=1)                                   # [C, 4]
 
     def merge_step(c, xs):
         gv, gi, lv, li, rv, ri, st = c
@@ -376,12 +436,13 @@ def _chunk_step_fused(idx_arrays, plan, carry, tiles_chunk,
 
 @partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
                                    "n_tiles", "bound_mode", "chunk_tiles",
-                                   "use_kernel", "fused"))
-def _retrieve_chunked_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
+                                   "use_kernel", "fused", "gather_kind"))
+def _retrieve_chunked_impl(gt, tile_max_b, tile_max_l,
                            sigma_b, sigma_l, q_terms, qw_b, qw_l,
                            alpha, beta, gamma, factor,
                            *, k, kq, pad_len, tile_size, n_tiles, bound_mode,
-                           chunk_tiles, use_kernel=False, fused=False):
+                           chunk_tiles, use_kernel=False, fused=False,
+                           gather_kind="fp32"):
     """Chunked traversal: real skipping under jit.
 
     Tiles are presorted by descending global upper bound and folded into
@@ -394,7 +455,7 @@ def _retrieve_chunked_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
     Under vmap-over-queries the loop runs until every query's bound fails
     (per-query ``chunks_dispatched`` still counts each query's own work).
     """
-    idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
+    idx_arrays = (gt, tile_max_b, tile_max_l)
 
     def plan_one(qt, qwb, qwl):
         plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
@@ -407,7 +468,7 @@ def _retrieve_chunked_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
     carries = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (b,) + x.shape), _init_carry(k))
     statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
-                   bound_mode=bound_mode)
+                   bound_mode=bound_mode, gather_kind=gather_kind)
 
     if fused:
         def step_one(plan, tiles_i, carry):
@@ -431,13 +492,13 @@ def _retrieve_chunked_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
 
 @partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
                                    "n_tiles", "bound_mode", "schedule",
-                                   "use_kernel"))
-def _retrieve_batched_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
+                                   "use_kernel", "gather_kind"))
+def _retrieve_batched_impl(gt, tile_max_b, tile_max_l,
                            sigma_b, sigma_l, q_terms, qw_b, qw_l,
                            alpha, beta, gamma, factor,
                            *, k, kq, pad_len, tile_size, n_tiles, bound_mode,
-                           schedule, use_kernel=False):
-    idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
+                           schedule, use_kernel=False, gather_kind="fp32"):
+    idx_arrays = (gt, tile_max_b, tile_max_l)
 
     def one_query(qt, qwb, qwl):
         plan = plan_query(qt, qwb, qwl, sigma_b, sigma_l, alpha)
@@ -449,7 +510,8 @@ def _retrieve_batched_impl(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
                                alpha, beta, gamma, factor,
                                k=k, kq=kq, pad_len=pad_len,
                                tile_size=tile_size, bound_mode=bound_mode,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel,
+                               gather_kind=gather_kind)
             return carry, None
 
         carry, _ = jax.lax.scan(step, _init_carry(k), tiles)
@@ -465,6 +527,12 @@ def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
                      traversal: str = "full",
                      chunk_tiles: int | None = None) -> RetrievalResult:
     """Batched retrieval: q_terms [B, Nq] int32 (pad with qw = 0).
+
+    ``index`` may be a ``BlockedImpactIndex`` or a
+    ``repro.index.CompressedImpactIndex`` — both expose the same planner
+    metadata and a ``gather_arrays()``/``gather_kind`` pair; the executors
+    decode compressed postings inside the gather (or inside the Pallas
+    kernel when ``use_kernel=True``).
 
     ``k`` is the retrieval depth for this call (falls back to the
     deprecated ``params.k`` stash, then DEFAULT_K). ``use_kernel=True``
@@ -494,13 +562,14 @@ def retrieve_batched(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
     qw_l = jnp.asarray(qw_l, dtype=jnp.float32)
     k = resolve_k(params, k)
     kq = min(k, index.tile_size)
-    arrays = (index.docids, index.w_b, index.w_l, index.tile_ptr,
+    arrays = (index.gather_arrays(),
               index.tile_max_b, index.tile_max_l,
               index.sigma_b, index.sigma_l, q_terms, qw_b, qw_l,
               jnp.float32(params.alpha), jnp.float32(params.beta),
               jnp.float32(params.gamma), jnp.float32(params.threshold_factor))
     statics = dict(k=k, kq=kq, pad_len=index.pad_len,
-                   tile_size=index.tile_size, bound_mode=params.bound_mode)
+                   tile_size=index.tile_size, bound_mode=params.bound_mode,
+                   gather_kind=index.gather_kind)
     disp = None
     if traversal == "full":
         out = _retrieve_batched_impl(*arrays, n_tiles=index.n_tiles,
@@ -539,14 +608,16 @@ def _plan_with_bounds(qt, qwb, qwl, sigma_b, sigma_l,
 
 
 @partial(jax.jit, static_argnames=("k", "kq", "pad_len", "tile_size",
-                                   "bound_mode"))
-def _tile_step_jit(docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l,
+                                   "bound_mode", "gather_kind"))
+def _tile_step_jit(gt, tile_max_b, tile_max_l,
                    plan, carry, tile, alpha, beta, gamma, factor,
-                   *, k, kq, pad_len, tile_size, bound_mode):
-    idx_arrays = (docids, w_b, w_l, tile_ptr, tile_max_b, tile_max_l)
+                   *, k, kq, pad_len, tile_size, bound_mode,
+                   gather_kind="fp32"):
+    idx_arrays = (gt, tile_max_b, tile_max_l)
     return _tile_step(idx_arrays, plan, carry, tile,
                       alpha, beta, gamma, factor, k=k, kq=kq, pad_len=pad_len,
-                      tile_size=tile_size, bound_mode=bound_mode)
+                      tile_size=tile_size, bound_mode=bound_mode,
+                      gather_kind=gather_kind)
 
 
 def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
@@ -569,7 +640,9 @@ def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
     args = (jnp.float32(alpha), jnp.float32(beta), jnp.float32(gamma),
             jnp.float32(factor))
     statics = dict(k=k, kq=kq, pad_len=index.pad_len,
-                   tile_size=index.tile_size, bound_mode=params.bound_mode)
+                   tile_size=index.tile_size, bound_mode=params.bound_mode,
+                   gather_kind=index.gather_kind)
+    gt = index.gather_arrays()
     ids = np.full((B, k), -1, np.int32)
     scores = np.full((B, k), -np.inf, np.float32)
     g_ids = np.full((B, k), -1, np.int32)
@@ -599,8 +672,7 @@ def retrieve_sequential(index: BlockedImpactIndex, q_terms, qw_b, qw_l,
                     break  # ub descending: every later tile fails too
                 continue
             carry = _tile_step_jit(
-                index.docids, index.w_b, index.w_l, index.tile_ptr,
-                index.tile_max_b, index.tile_max_l,
+                gt, index.tile_max_b, index.tile_max_l,
                 plan, carry, jnp.int32(tau), *args, **statics)
             th_gl = float(carry[0][-1])
             visited += 1

@@ -1,0 +1,18 @@
+"""repro.index — compressed blocked-impact index storage.
+
+``CompressedImpactIndex`` keeps the BII tile geometry and exact fp32
+bounds while storing postings as delta+bit-packed doc offsets and
+int8-quantized impacts (per-(term, tile) fp16 scale/zero). It plugs into
+every traversal executor through the polymorphic gather contract in
+``core.index.dispatch_gather`` and is built either in one shot
+(``compress_index``) or corpus-chunk-at-a-time with checkpointed resume
+(``repro.data.StreamingIndexBuilder``).
+"""
+from .compressed import (CompressedImpactIndex, compress_index,
+                         encode_runs, from_encoded_grids, gather_tile_q,
+                         gather_tile_q_raw)
+from . import codec
+
+__all__ = ["CompressedImpactIndex", "compress_index", "encode_runs",
+           "from_encoded_grids", "gather_tile_q", "gather_tile_q_raw",
+           "codec"]

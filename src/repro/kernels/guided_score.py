@@ -227,3 +227,307 @@ def guided_score_chunk(offs, wb, wl, essential, prefix_beta, skip, th_lo,
         interpret=interpret,
     )(scal, essential.astype(jnp.float32), prefix_beta.astype(jnp.float32),
       skip.astype(jnp.int32), offs, wb, wl)
+
+
+# ---------------------------------------------------------------------------
+# Decode-in-kernel variants for the compressed index (q8 gather kind).
+#
+# Inputs arrive *undecoded* (``repro.index.gather_tile_q_raw``): packed
+# delta words, raw uint8 impact codes, per-row run metadata. Grid cell 0
+# (lane block 0) delta-decodes the offsets and dequantizes both impact
+# channels once into VMEM scratch — TPU grid cells run sequentially and
+# scratch persists, so later lane blocks reuse the decoded rows. The
+# gather is memory-bound, so the decode rides otherwise-idle compute:
+#
+#   gap_j   = (words[bitpos >> 5] >> (bitpos & 31)) & (2^w - 1)
+#             via a one-hot MXU word gather on uint16 halves (each half
+#             < 2^16 is exact in f32; recombined in int32),
+#   offs_j  = first + sum_{i <= j} (gap_i + 1)   (inclusive-cumsum matmul
+#             against a lower-triangular ones matrix — offsets < tile_size
+#             <= 2^16 stay exact in f32),
+#   w_j     = (zero + scale * q_j) * qw           (<= exact tile max * qw
+#             by codec construction, so planner bounds stay valid).
+#
+# Output gains a 6th row — per-slot posting count — so the caller derives
+# presence/postings-touched stats without a second (host-side) decode.
+# ---------------------------------------------------------------------------
+
+
+def _decode_rows(offs_s, wb_s, wl_s, meta_i, meta_f, qw, words, qb, ql,
+                 *, nq: int, pad_len: int, wp: int):
+    """Decode all ``nq`` rows of one tile into the scratch buffers.
+
+    Accessors (callables, so the single-tile and chunk kernels can bind
+    their different block ranks): ``meta_i(r, i)``/``meta_f(r, i)``/
+    ``qw(r, i)`` scalar reads, ``words(i)`` -> [Wp] int32,
+    ``qb(i)``/``ql(i)`` -> [P] f32 raw codes."""
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, pad_len), 1)
+    word_iota = jax.lax.broadcasted_iota(jnp.int32, (wp, pad_len), 0)
+    # inclusive-cumsum operator: tri[a, b] = 1 iff a <= b
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (pad_len, pad_len), 0)
+           <= jax.lax.broadcasted_iota(jnp.int32, (pad_len, pad_len), 1)
+           ).astype(jnp.float32)
+
+    def dec(i, _):
+        cnt_i = meta_i(0, i)
+        first_i = meta_i(1, i)
+        w_i = meta_i(2, i)
+        bitpos = jnp.maximum(j - 1, 0) * w_i            # value idx = j - 1
+        widx = jnp.minimum(bitpos >> 5, wp - 1)         # [1, P]
+        w32 = words(i)[None, :]                         # [1, Wp] int32
+        lo = (w32 & 0xFFFF).astype(jnp.float32)
+        hi = jax.lax.shift_right_logical(w32, 16).astype(jnp.float32)
+        onehot = (word_iota == widx).astype(jnp.float32)  # [Wp, P]
+        lo_j = jnp.dot(lo, onehot, preferred_element_type=jnp.float32)
+        hi_j = jnp.dot(hi, onehot, preferred_element_type=jnp.float32)
+        word_j = (hi_j.astype(jnp.int32) << 16) | lo_j.astype(jnp.int32)
+        shift = bitpos & 31
+        gap = (jax.lax.shift_right_logical(word_j, shift)
+               & ((1 << w_i) - 1))                      # [1, P]
+        contrib = jnp.where(j == 0, first_i, gap + 1).astype(jnp.float32)
+        offs_f = jnp.dot(contrib, tri, preferred_element_type=jnp.float32)
+        valid = j < cnt_i
+        offs_s[i, :] = jnp.where(valid, offs_f.astype(jnp.int32), -1)[0]
+        vmask = valid[0].astype(jnp.float32)
+        wb_s[i, :] = (meta_f(0, i) + meta_f(1, i) * qb(i)) * vmask * qw(0, i)
+        wl_s[i, :] = (meta_f(2, i) + meta_f(3, i) * ql(i)) * vmask * qw(1, i)
+        return 0
+    jax.lax.fori_loop(0, nq, dec, 0)
+
+
+def _kernel_q(scal_ref, ess_ref, pbeta_ref, meta_i_ref, meta_f_ref, qw_ref,
+              words_ref, qb_ref, ql_ref, out_ref,
+              dense_b, dense_l, offs_s, wb_s, wl_s,
+              *, nq: int, block_s: int, pad_len: int, wp: int):
+    th_lo = scal_ref[0]
+    alpha = scal_ref[1]
+    beta = scal_ref[2]
+    gamma = scal_ref[3]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _decode():
+        _decode_rows(offs_s, wb_s, wl_s,
+                     lambda r, i: meta_i_ref[r, i],
+                     lambda r, i: meta_f_ref[r, i],
+                     lambda r, i: qw_ref[r, i],
+                     lambda i: words_ref[i, :],
+                     lambda i: qb_ref[i, :],
+                     lambda i: ql_ref[i, :],
+                     nq=nq, pad_len=pad_len, wp=wp)
+
+    base = pl.program_id(0) * block_s
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+
+    # Pass 1: scatter decoded postings to dense rows (one-hot MXU matvec),
+    # accumulating essential presence and the per-slot posting count.
+    def scatter(i, carry):
+        ess_cnt, tot_cnt = carry
+        offs = offs_s[i, :][None, :]                       # [1, P]
+        onehot = (offs.T == lane).astype(jnp.float32)      # [P, S_blk]
+        db = jnp.dot(wb_s[i, :][None, :], onehot,
+                     preferred_element_type=jnp.float32)
+        dl = jnp.dot(wl_s[i, :][None, :], onehot,
+                     preferred_element_type=jnp.float32)
+        valid = (offs >= 0).astype(jnp.float32)
+        cnt = jnp.dot(valid, onehot, preferred_element_type=jnp.float32)
+        dense_b[i, :] = db[0]
+        dense_l[i, :] = dl[0]
+        return ess_cnt + ess_ref[i] * cnt, tot_cnt + cnt
+    zero = jnp.zeros((1, block_s), jnp.float32)
+    ess_cnt, tot_cnt = jax.lax.fori_loop(0, nq, scatter, (zero, zero))
+    survive = (ess_cnt > 0).astype(jnp.float32)
+
+    # Pass 2: descending freeze loop (local level) — identical to _kernel.
+    def freeze(j, carry):
+        i = nq - 1 - j
+        sb, sl, alive = carry
+        l_part = beta * sb + (1.0 - beta) * sl
+        ok = jnp.where(ess_ref[i] > 0, 1.0,
+                       (l_part + pbeta_ref[i] > th_lo).astype(jnp.float32))
+        alive = alive * ok
+        gate = survive * alive
+        sb = sb + gate * dense_b[i, :][None, :]
+        sl = sl + gate * dense_l[i, :][None, :]
+        return sb, sl, alive
+    sb, sl, alive = jax.lax.fori_loop(
+        0, nq, freeze, (zero, zero, jnp.ones((1, block_s), jnp.float32)))
+
+    out_ref[0, :] = (alpha * sb + (1.0 - alpha) * sl)[0]    # Global
+    out_ref[1, :] = (beta * sb + (1.0 - beta) * sl)[0]      # Local
+    out_ref[2, :] = (gamma * sb + (1.0 - gamma) * sl)[0]    # RankScore
+    out_ref[3, :] = (survive * alive)[0]                    # eval mask
+    out_ref[4, :] = survive[0]                              # rank mask
+    out_ref[5, :] = tot_cnt[0]                              # postings/slot
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size", "pad_len",
+                                             "block_s", "interpret"))
+def guided_score_tile_q(words, qb_row, ql_row, meta_i, meta_f, qw_b, qw_l,
+                        essential, prefix_beta, th_lo, alpha, beta, gamma,
+                        *, tile_size: int, pad_len: int, block_s: int = 512,
+                        interpret: bool | None = None):
+    """Decode-in-kernel scoring of one (query, tile) pair on the
+    compressed index. Returns [6, tile_size] — rows 0-4 as
+    ``guided_score_tile``, row 5 = per-slot posting count (stats source).
+
+    Inputs are the raw rows from ``repro.index.gather_tile_q_raw`` plus
+    the per-term query weights (applied after dequantization, preserving
+    the fp32 path's ``fl(dequant) * qw <= fl(tile_max * qw)`` bound)."""
+    if interpret is None:
+        interpret = default_interpret()
+    nq, wp = words.shape
+    block_s = min(block_s, tile_size)
+    assert tile_size % block_s == 0
+    scal = jnp.stack([th_lo, alpha, beta, gamma]).astype(jnp.float32)
+    qw = jnp.stack([qw_b, qw_l]).astype(jnp.float32)         # [2, Nq]
+    grid = (tile_size // block_s,)
+    kern = functools.partial(_kernel_q, nq=nq, block_s=block_s,
+                             pad_len=pad_len, wp=wp)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # scalars
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # essential
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # prefix_beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # meta_i
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # meta_f
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # qw
+            pl.BlockSpec((nq, wp), lambda i: (0, 0)),              # words
+            pl.BlockSpec((nq, pad_len), lambda i: (0, 0)),         # qb codes
+            pl.BlockSpec((nq, pad_len), lambda i: (0, 0)),         # ql codes
+        ],
+        out_specs=pl.BlockSpec((6, block_s), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((6, tile_size), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nq, block_s), jnp.float32),
+                        pltpu.VMEM((nq, block_s), jnp.float32),
+                        pltpu.VMEM((nq, pad_len), jnp.int32),
+                        pltpu.VMEM((nq, pad_len), jnp.float32),
+                        pltpu.VMEM((nq, pad_len), jnp.float32)],
+        interpret=interpret,
+    )(scal, essential.astype(jnp.float32), prefix_beta.astype(jnp.float32),
+      meta_i.astype(jnp.int32), meta_f.astype(jnp.float32), qw,
+      words, qb_row, ql_row)
+
+
+def _chunk_kernel_q(scal_ref, ess_ref, pbeta_ref, skip_ref, meta_i_ref,
+                    meta_f_ref, qw_ref, words_ref, qb_ref, ql_ref, out_ref,
+                    dense_b, dense_l, offs_s, wb_s, wl_s,
+                    *, nq: int, block_s: int, pad_len: int, wp: int):
+    """Chunked decode-in-kernel scoring. Grid = (tile-in-chunk, lane
+    block); the grid iterates lane blocks innermost, so decoding tile c's
+    rows at lane block 0 leaves the scratch valid for the remaining lane
+    blocks of the same tile. Skipped tiles publish zeros and skip both
+    the decode and the score passes."""
+    th_lo = scal_ref[0]
+    alpha = scal_ref[1]
+    beta = scal_ref[2]
+    gamma = scal_ref[3]
+    c = pl.program_id(0)
+
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when((skip_ref[c] == 0) & (pl.program_id(1) == 0))
+    def _decode():
+        _decode_rows(offs_s, wb_s, wl_s,
+                     lambda r, i: meta_i_ref[c, r, i],
+                     lambda r, i: meta_f_ref[c, r, i],
+                     lambda r, i: qw_ref[r, i],
+                     lambda i: words_ref[0, i, :],
+                     lambda i: qb_ref[0, i, :],
+                     lambda i: ql_ref[0, i, :],
+                     nq=nq, pad_len=pad_len, wp=wp)
+
+    base = pl.program_id(1) * block_s
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+
+    @pl.when(skip_ref[c] == 0)
+    def _score():
+        def scatter(i, carry):
+            ess_cnt, tot_cnt = carry
+            offs = offs_s[i, :][None, :]
+            onehot = (offs.T == lane).astype(jnp.float32)
+            db = jnp.dot(wb_s[i, :][None, :], onehot,
+                         preferred_element_type=jnp.float32)
+            dl = jnp.dot(wl_s[i, :][None, :], onehot,
+                         preferred_element_type=jnp.float32)
+            valid = (offs >= 0).astype(jnp.float32)
+            cnt = jnp.dot(valid, onehot, preferred_element_type=jnp.float32)
+            dense_b[i, :] = db[0]
+            dense_l[i, :] = dl[0]
+            return ess_cnt + ess_ref[c, i] * cnt, tot_cnt + cnt
+        zero = jnp.zeros((1, block_s), jnp.float32)
+        ess_cnt, tot_cnt = jax.lax.fori_loop(0, nq, scatter, (zero, zero))
+        survive = (ess_cnt > 0).astype(jnp.float32)
+
+        def freeze(j, carry):
+            i = nq - 1 - j
+            sb, sl, alive = carry
+            l_part = beta * sb + (1.0 - beta) * sl
+            ok = jnp.where(ess_ref[c, i] > 0, 1.0,
+                           (l_part + pbeta_ref[c, i] > th_lo
+                            ).astype(jnp.float32))
+            alive = alive * ok
+            gate = survive * alive
+            sb = sb + gate * dense_b[i, :][None, :]
+            sl = sl + gate * dense_l[i, :][None, :]
+            return sb, sl, alive
+        sb, sl, alive = jax.lax.fori_loop(
+            0, nq, freeze, (zero, zero, jnp.ones((1, block_s), jnp.float32)))
+
+        out_ref[0, 0, :] = (alpha * sb + (1.0 - alpha) * sl)[0]
+        out_ref[0, 1, :] = (beta * sb + (1.0 - beta) * sl)[0]
+        out_ref[0, 2, :] = (gamma * sb + (1.0 - gamma) * sl)[0]
+        out_ref[0, 3, :] = (survive * alive)[0]
+        out_ref[0, 4, :] = survive[0]
+        out_ref[0, 5, :] = tot_cnt[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size", "pad_len",
+                                             "block_s", "interpret"))
+def guided_score_chunk_q(words, qb_row, ql_row, meta_i, meta_f, qw_b, qw_l,
+                         essential, prefix_beta, skip, th_lo,
+                         alpha, beta, gamma, *, tile_size: int, pad_len: int,
+                         block_s: int = 512, interpret: bool | None = None):
+    """Chunked decode-in-kernel scoring on the compressed index.
+
+    Chunk-stacked raw inputs (words [C, Nq, Wp], codes [C, Nq, P], meta_i
+    [C, 3, Nq], meta_f [C, 4, Nq]); per-tile planner inputs as
+    ``guided_score_chunk``. Returns [C, 6, tile_size] (row 5 = per-slot
+    posting count)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n_chunk, nq, wp = words.shape
+    block_s = min(block_s, tile_size)
+    assert tile_size % block_s == 0
+    scal = jnp.stack([th_lo, alpha, beta, gamma]).astype(jnp.float32)
+    qw = jnp.stack([qw_b, qw_l]).astype(jnp.float32)
+    grid = (n_chunk, tile_size // block_s)
+    kern = functools.partial(_chunk_kernel_q, nq=nq, block_s=block_s,
+                             pad_len=pad_len, wp=wp)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # scalars
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # essential
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # prefix_beta
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # skip
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # meta_i
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # meta_f
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # qw
+            pl.BlockSpec((1, nq, wp), lambda c, s: (c, 0, 0)),     # words
+            pl.BlockSpec((1, nq, pad_len), lambda c, s: (c, 0, 0)),  # qb
+            pl.BlockSpec((1, nq, pad_len), lambda c, s: (c, 0, 0)),  # ql
+        ],
+        out_specs=pl.BlockSpec((1, 6, block_s), lambda c, s: (c, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((n_chunk, 6, tile_size), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nq, block_s), jnp.float32),
+                        pltpu.VMEM((nq, block_s), jnp.float32),
+                        pltpu.VMEM((nq, pad_len), jnp.int32),
+                        pltpu.VMEM((nq, pad_len), jnp.float32),
+                        pltpu.VMEM((nq, pad_len), jnp.float32)],
+        interpret=interpret,
+    )(scal, essential.astype(jnp.float32), prefix_beta.astype(jnp.float32),
+      skip.astype(jnp.int32), meta_i.astype(jnp.int32),
+      meta_f.astype(jnp.float32), qw, words, qb_row, ql_row)

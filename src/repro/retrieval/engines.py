@@ -85,11 +85,12 @@ class Engine(Protocol):
 
 
 def _require_bii(index, engine: str) -> BlockedImpactIndex:
+    from ..index.compressed import CompressedImpactIndex
     if isinstance(index, HybridIndex):
         index = index.sparse   # sparse engines serve the sparse side
-    if not isinstance(index, BlockedImpactIndex):
-        raise TypeError(f"engine {engine!r} needs a BlockedImpactIndex, "
-                        f"got {type(index).__name__}")
+    if not isinstance(index, (BlockedImpactIndex, CompressedImpactIndex)):
+        raise TypeError(f"engine {engine!r} needs a BlockedImpactIndex or "
+                        f"CompressedImpactIndex, got {type(index).__name__}")
     return index
 
 

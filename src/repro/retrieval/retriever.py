@@ -88,8 +88,11 @@ class Retriever:
              engine: str = "batched", *, k_buckets=K_BUCKETS,
              **engine_opts) -> "Retriever":
         """Build a retriever: ``index`` + pruning ``params`` + an engine
-        name from the registry. ``engine_opts`` go to the engine
-        constructor (e.g. ``n_shards=4, exchange_every=8`` for
+        name from the registry. ``index`` may be a fp32
+        ``BlockedImpactIndex``, a ``repro.index.CompressedImpactIndex``
+        (decode-on-gather; every sparse engine serves it transparently),
+        or a ``HybridIndex`` wrapping either. ``engine_opts`` go to the
+        engine constructor (e.g. ``n_shards=4, exchange_every=8`` for
         ``"sharded"``, ``warmup=False`` for ``"sequential"``)."""
         params = params if params is not None else TwoLevelParams()
         eng = get_engine(engine)(index, params, **engine_opts)

@@ -201,16 +201,18 @@ def _rebase(ids, base):
 
 @partial(jax.jit, static_argnames=(
     "k", "kq", "pad_len", "tile_size", "bound_mode", "use_kernel",
-    "schedule", "tiles_per_shard", "n_shards", "exchange_every",
-    "traversal", "chunk_tiles"))
-def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
+    "gather_kind", "schedule", "tiles_per_shard", "n_shards",
+    "exchange_every", "traversal", "chunk_tiles"))
+def _sharded_impl_emulated(gather, tm_b, tm_l, doc_base,
                            n_real, sigma_b, sigma_l, q_terms, qw_b, qw_l,
                            alpha, beta, gamma, factor,
                            *, k, kq, pad_len, tile_size, bound_mode,
-                           use_kernel, schedule, tiles_per_shard, n_shards,
-                           exchange_every, traversal="full", chunk_tiles=8):
+                           use_kernel, gather_kind, schedule, tiles_per_shard,
+                           n_shards, exchange_every, traversal="full",
+                           chunk_tiles=8):
     statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
-                   bound_mode=bound_mode, use_kernel=use_kernel)
+                   bound_mode=bound_mode, use_kernel=use_kernel,
+                   gather_kind=gather_kind)
     b = q_terms.shape[0]
     carries = _broadcast_carry(k, n_shards, b)
     no_floor = jnp.full((b,), -jnp.inf, jnp.float32)
@@ -234,7 +236,7 @@ def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
         def run_round(carries, disp, chunks_round, ub_round, floor):
             return jax.vmap(round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, None,
                                                None, None, None, None))(
-                (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
+                (gather, tm_b, tm_l),
                 n_real, plans, chunks_round, ub_round, carries, disp,
                 floor, alpha, beta, gamma, factor)
 
@@ -259,7 +261,7 @@ def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
         def run_round(carries, tiles_round, floor):
             return jax.vmap(scan, in_axes=(0, 0, 0, 0, 0, None,
                                            None, None, None, None))(
-                (docids, w_b, w_l, tile_ptr, tm_b, tm_l),
+                (gather, tm_b, tm_l),
                 n_real, plans, tiles_round, carries, floor,
                 alpha, beta, gamma, factor)
 
@@ -287,25 +289,26 @@ def _sharded_impl_emulated(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
 
 @partial(jax.jit, static_argnames=(
     "k", "kq", "pad_len", "tile_size", "bound_mode", "use_kernel",
-    "schedule", "tiles_per_shard", "n_shards", "exchange_every",
-    "mesh", "axis_name", "traversal", "chunk_tiles"))
-def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
+    "gather_kind", "schedule", "tiles_per_shard", "n_shards",
+    "exchange_every", "mesh", "axis_name", "traversal", "chunk_tiles"))
+def _sharded_impl_mesh(gather, tm_b, tm_l, doc_base,
                        n_real, sigma_b, sigma_l, q_terms, qw_b, qw_l,
                        alpha, beta, gamma, factor,
                        *, k, kq, pad_len, tile_size, bound_mode, use_kernel,
-                       schedule, tiles_per_shard, n_shards, exchange_every,
-                       mesh, axis_name, traversal="full", chunk_tiles=8):
+                       gather_kind, schedule, tiles_per_shard, n_shards,
+                       exchange_every, mesh, axis_name, traversal="full",
+                       chunk_tiles=8):
     statics = dict(k=k, kq=kq, pad_len=pad_len, tile_size=tile_size,
-                   bound_mode=bound_mode, use_kernel=use_kernel)
+                   bound_mode=bound_mode, use_kernel=use_kernel,
+                   gather_kind=gather_kind)
     scan = partial(_scan_chunk, statics=statics)
     chunked = traversal == "chunked"
 
-    def local_fn(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
+    def local_fn(gather, tm_b, tm_l, doc_base, n_real,
                  sigma_b, sigma_l, q_terms, qw_b, qw_l,
                  alpha, beta, gamma, factor):
         # sharded operands arrive with a local leading dim of 1
-        idx_arrays = (docids[0], w_b[0], w_l[0],
-                      tile_ptr[0], tm_b[0], tm_l[0])
+        idx_arrays = (tuple(a[0] for a in gather), tm_b[0], tm_l[0])
         b = q_terms.shape[0]
         carries = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (b,) + x.shape), _init_carry(k))
@@ -376,18 +379,19 @@ def _sharded_impl_mesh(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base,
         return gv, gi, lv, li, rv, ri, st[None], disp_out
 
     sh = P(axis_name)
-    sh2 = P(axis_name, None)
     sh3 = P(axis_name, None, None)
     rep1, rep2 = P(None), P(None, None)
     scal = P()
+    # per-leaf shard specs: every gather leaf is stacked on the shard axis
+    gspec = tuple(P(axis_name, *([None] * (a.ndim - 1))) for a in gather)
     f = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(sh2, sh2, sh2, sh3, sh3, sh3, sh, sh,
+        in_specs=(gspec, sh3, sh3, sh, sh,
                   rep1, rep1, rep2, rep2, rep2,
                   scal, scal, scal, scal),
-        out_specs=(rep2, rep2, rep2, rep2, rep2, rep2, sh3, sh2),
+        out_specs=(rep2, rep2, rep2, rep2, rep2, rep2, sh3, P(axis_name, None)),
         check_rep=False)
-    out = f(docids, w_b, w_l, tile_ptr, tm_b, tm_l, doc_base, n_real,
+    out = f(gather, tm_b, tm_l, doc_base, n_real,
             sigma_b, sigma_l, q_terms, qw_b, qw_l,
             alpha, beta, gamma, factor)
     gv, gi, lv, li, rv, ri, st, disp = out
@@ -438,11 +442,12 @@ def shard_retrieve_batched(sharded: ShardedImpactIndex, q_terms, qw_b, qw_l,
     ct = int(chunk_tiles if chunk_tiles is not None else params.chunk_tiles)
     kw = dict(k=k, kq=kq, pad_len=sharded.pad_len,
               tile_size=sharded.tile_size, bound_mode=params.bound_mode,
-              use_kernel=use_kernel, schedule=params.schedule,
+              use_kernel=use_kernel, gather_kind=sharded.gather_kind,
+              schedule=params.schedule,
               tiles_per_shard=sharded.tiles_per_shard,
               n_shards=sharded.n_shards, exchange_every=exchange_every,
               traversal=traversal, chunk_tiles=ct)
-    args = (sharded.docids, sharded.w_b, sharded.w_l, sharded.tile_ptr,
+    args = (sharded.gather,
             sharded.tile_max_b, sharded.tile_max_l, sharded.doc_base,
             sharded.n_real_tiles,
             sharded.sigma_b, sharded.sigma_l, q_terms, qw_b, qw_l,

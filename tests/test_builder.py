@@ -1,0 +1,202 @@
+"""StreamingIndexBuilder: chunked build == one-shot compress, idempotent
+add, checkpointed crash-resume.
+
+The load-bearing property: per-(term, tile) runs are word-aligned and
+self-contained, so per-chunk encodes concatenated in global run order
+are *bit-identical* to one ``compress_index`` over the whole corpus —
+resume therefore never changes the produced index, only the wall clock.
+
+The kill-and-resume test SIGKILLs a child build inside the durability
+window (chunk spilled, manifest not yet written — the crash point the
+atomic-replace protocol is designed around) and pins that reopening the
+builder and replaying the stream yields the one-shot index bit-for-bit.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.data import (StreamingIndexBuilder, make_corpus,
+                        synthetic_chunk_stream)
+from repro.index import compress_index
+
+_ARRAYS = ("packed", "qb", "ql", "tile_ptr", "pack_ptr", "width", "first",
+           "scale_b", "zero_b", "scale_l", "zero_l", "tile_max_b",
+           "tile_max_l", "sigma_b", "sigma_l")
+
+N_DOCS = 2048
+TILE = 256
+CHUNK_DOCS = 512  # 4 chunks, 2 tiles each
+
+
+def _assert_indexes_equal(a, b):
+    assert (a.n_docs, a.n_terms, a.n_tiles, a.nnz, a.pad_len) == \
+        (b.n_docs, b.n_terms, b.n_tiles, b.nnz, b.pad_len)
+    for name in _ARRAYS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=name)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus("splade_like", n_docs=N_DOCS, n_terms=256,
+                       n_queries=4, avg_doc_terms=24, seed=5)
+
+
+def test_chunked_equals_oneshot(corpus, tmp_path):
+    oneshot = compress_index(corpus.merged("scaled"), tile_size=TILE)
+    b = StreamingIndexBuilder(tmp_path / "idx", n_terms=corpus.n_terms,
+                              tile_size=TILE, chunk_docs=CHUNK_DOCS)
+    for ch in corpus.iter_chunks(CHUNK_DOCS):
+        assert b.add_chunk(ch)
+    _assert_indexes_equal(b.finalize(), oneshot)
+
+
+def test_short_last_chunk(corpus, tmp_path):
+    # last chunk holds fewer docs than chunk_docs (non-divisible corpus)
+    oneshot = compress_index(corpus.merged("scaled"), tile_size=TILE)
+    b = StreamingIndexBuilder(tmp_path / "idx", n_terms=corpus.n_terms,
+                              tile_size=TILE, chunk_docs=768)
+    for ch in corpus.iter_chunks(768):  # 768 = 3 tiles; 2048 = 2x768+512
+        b.add_chunk(ch)
+    _assert_indexes_equal(b.finalize(), oneshot)
+
+
+def test_add_chunk_idempotent(corpus, tmp_path):
+    b = StreamingIndexBuilder(tmp_path / "idx", n_terms=corpus.n_terms,
+                              tile_size=TILE, chunk_docs=CHUNK_DOCS)
+    chunks = list(corpus.iter_chunks(CHUNK_DOCS))
+    for ch in chunks:
+        assert b.add_chunk(ch) is True
+    for ch in chunks:  # replay: every add is a recorded no-op
+        assert b.add_chunk(ch) is False
+    _assert_indexes_equal(b.finalize(),
+                          compress_index(corpus.merged("scaled"),
+                                         tile_size=TILE))
+
+
+def test_geometry_validation(corpus, tmp_path):
+    with pytest.raises(ValueError, match="multiple of"):
+        StreamingIndexBuilder(tmp_path / "a", n_terms=256, tile_size=256,
+                              chunk_docs=300)
+    StreamingIndexBuilder(tmp_path / "b", n_terms=256, tile_size=256,
+                          chunk_docs=512)
+    with pytest.raises(ValueError, match="geometry mismatch"):
+        StreamingIndexBuilder(tmp_path / "b", n_terms=256, tile_size=128,
+                              chunk_docs=512)
+    # misplaced chunk: doc_start must equal chunk_id * chunk_docs
+    b = StreamingIndexBuilder(tmp_path / "c", n_terms=corpus.n_terms,
+                              tile_size=TILE, chunk_docs=CHUNK_DOCS)
+    ch = next(iter(corpus.iter_chunks(CHUNK_DOCS)))
+    bad = type(ch)(chunk_id=1, doc_start=ch.doc_start, n_docs=ch.n_docs,
+                   terms=ch.terms, docids=ch.docids, w_b=ch.w_b, w_l=ch.w_l)
+    with pytest.raises(ValueError, match="starts at doc"):
+        b.add_chunk(bad)
+    with pytest.raises(ValueError, match="no chunks"):
+        StreamingIndexBuilder(tmp_path / "d", n_terms=256, tile_size=256,
+                              chunk_docs=512).finalize()
+
+
+def test_finalize_rejects_gaps(corpus, tmp_path):
+    b = StreamingIndexBuilder(tmp_path / "idx", n_terms=corpus.n_terms,
+                              tile_size=TILE, chunk_docs=CHUNK_DOCS)
+    for ch in corpus.iter_chunks(CHUNK_DOCS):
+        if ch.chunk_id != 1:  # hole in the chunk sequence
+            b.add_chunk(ch)
+    with pytest.raises(ValueError, match="contiguous"):
+        b.finalize()
+
+
+def test_stream_chunks_are_seed_pure():
+    """Each chunk is a pure function of (seed, chunk_id): regenerating
+    chunk 2 via start_chunk matches the full stream — the property that
+    makes 'reopen and replay from the first missing chunk' a valid
+    resume."""
+    full = list(synthetic_chunk_stream(4, 512, 128, seed=9))
+    tail = list(synthetic_chunk_stream(4, 512, 128, seed=9, start_chunk=2))
+    assert [c.chunk_id for c in tail] == [2, 3]
+    for a, b in zip(full[2:], tail):
+        np.testing.assert_array_equal(a.terms, b.terms)
+        np.testing.assert_array_equal(a.docids, b.docids)
+        np.testing.assert_array_equal(a.w_b, b.w_b)
+        np.testing.assert_array_equal(a.w_l, b.w_l)
+
+
+_CRASH_CHILD = textwrap.dedent("""\
+    import os, signal, sys
+    from repro.data import StreamingIndexBuilder, synthetic_chunk_stream
+
+    out = sys.argv[1]
+
+    class CrashingBuilder(StreamingIndexBuilder):
+        calls = 0
+        def _write_manifest(self):
+            # call 1: __init__; calls 2-3: chunks 0-1; call 4: chunk 2 —
+            # die with the spill on disk but unrecorded (the orphan-spill
+            # crash window between os.replace and the manifest update)
+            CrashingBuilder.calls += 1
+            if CrashingBuilder.calls == 4:
+                os.kill(os.getpid(), signal.SIGKILL)
+            super()._write_manifest()
+
+    b = CrashingBuilder(out, n_terms=128, tile_size=256, chunk_docs=512)
+    for ch in synthetic_chunk_stream(4, 512, 128, seed=9):
+        b.add_chunk(ch)
+    raise SystemExit("child survived past the kill point")
+""")
+
+
+def test_kill_and_resume(tmp_path):
+    out = tmp_path / "idx"
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", _CRASH_CHILD, str(out)],
+                          env=env, cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))),
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+
+    # crash state: chunks 0-1 recorded, chunk 2 spilled but orphaned
+    b = StreamingIndexBuilder(out, n_terms=128, tile_size=256,
+                              chunk_docs=512)
+    assert b.completed_chunks == [0, 1]
+    assert (out / "chunk_00002.npz").exists()
+
+    # resume: replay from the first missing chunk; the orphan spill is
+    # simply rewritten, recorded chunks are skipped
+    start = min(set(range(4)) - set(b.completed_chunks))
+    assert start == 2
+    for ch in synthetic_chunk_stream(4, 512, 128, seed=9, start_chunk=start):
+        assert b.add_chunk(ch) is True
+    resumed = b.finalize()
+
+    # bit-identical to a build that never crashed
+    clean = StreamingIndexBuilder(tmp_path / "clean", n_terms=128,
+                                  tile_size=256, chunk_docs=512)
+    for ch in synthetic_chunk_stream(4, 512, 128, seed=9):
+        clean.add_chunk(ch)
+    _assert_indexes_equal(resumed, clean.finalize())
+
+
+@pytest.mark.slow
+def test_million_doc_build():
+    """The acceptance-scale build: 2^20 docs streamed through the
+    builder; the compressed index must stay under 25% of the fp32
+    bytes (the BENCH_index.json headline, pinned here as a test)."""
+    import tempfile
+    n_chunks, chunk_docs = 16, 65536
+    with tempfile.TemporaryDirectory() as d:
+        b = StreamingIndexBuilder(d, n_terms=256, tile_size=8192,
+                                  chunk_docs=chunk_docs)
+        for ch in synthetic_chunk_stream(n_chunks, chunk_docs, 256,
+                                         avg_doc_terms=64, seed=0,
+                                         zipf_a=1.2):
+            b.add_chunk(ch)
+        index = b.finalize()
+    assert index.n_docs == n_chunks * chunk_docs == 1 << 20
+    ratio = index.nbytes()["total"] / index.fp32_nbytes()
+    assert ratio < 0.25, f"compression ratio {ratio:.3f} >= 0.25"

@@ -1,0 +1,189 @@
+"""CompressedImpactIndex parity: the q8 decode paths against the fp32
+BlockedImpactIndex on the same corpus.
+
+The compressed index keeps the *exact* fp32 tile maxima, so the planner
+(chunk schedule, theta pruning) is identical; only scores move, by at
+most the quantization step. The tests pin:
+
+- gather-level decode: ``gather_tile_q`` offsets are bit-identical to
+  the fp32 gather (lossless docid codec) and impacts are within the
+  quantization step of fp32, never above the tile max;
+- retrieval parity: rank-safe traversal on the compressed index returns
+  the same top-k ids as fp32 (modulo quantization-score ties), for every
+  registry engine including the hybrid cascade/rrf lanes and the
+  in-kernel Pallas decode;
+- save/load round-trip.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_index, twolevel
+from repro.core.index import dispatch_gather, gather_tile
+from repro.core.traversal import retrieve_batched, retrieve_sequential
+from repro.eval import build_hybrid, make_graded_corpus
+from repro.index import CompressedImpactIndex, compress_index
+from repro.retrieval import Retriever
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    merged = small_corpus.merged("scaled")
+    fp32 = build_index(merged, tile_size=256)
+    q8 = compress_index(merged, tile_size=256)
+    return small_corpus, fp32, q8
+
+
+def _overlap(a, b):
+    """Mean per-query top-k set overlap."""
+    return np.mean([len(set(a[q].tolist()) & set(b[q].tolist())) / len(a[q])
+                    for q in range(len(a))])
+
+
+def test_geometry_and_bounds_match_fp32(setup):
+    _, fp32, q8 = setup
+    assert (q8.n_docs, q8.n_terms, q8.n_tiles, q8.pad_len) == \
+        (fp32.n_docs, fp32.n_terms, fp32.n_tiles, fp32.pad_len)
+    np.testing.assert_array_equal(np.asarray(q8.tile_ptr),
+                                  np.asarray(fp32.tile_ptr))
+    # exact bounds preserved -> identical plans/pruning decisions
+    np.testing.assert_array_equal(np.asarray(q8.tile_max_b),
+                                  np.asarray(fp32.tile_max_b))
+    np.testing.assert_array_equal(np.asarray(q8.sigma_l),
+                                  np.asarray(fp32.sigma_l))
+    assert q8.nbytes()["total"] < 0.5 * q8.fp32_nbytes()
+
+
+def test_gather_decode_matches_fp32(setup):
+    corpus, fp32, q8 = setup
+    # the gather contract is flat per-term rows: [Nq] terms, one tile each
+    q_terms = corpus.queries.reshape(-1).astype(np.int32)
+    qw_b = corpus.q_weights_b.reshape(-1)
+    qw_l = corpus.q_weights_l.reshape(-1)
+    tm_b = np.asarray(fp32.tile_max_b)
+    for tile in range(0, fp32.n_tiles, 2):
+        offs_f, wb_f, wl_f = gather_tile(
+            fp32.docids, fp32.w_b, fp32.w_l, fp32.tile_ptr,
+            q_terms, tile, qw_b, qw_l,
+            pad_len=fp32.pad_len, tile_size=fp32.tile_size)
+        offs_q, wb_q, wl_q = dispatch_gather(
+            "q8", q8.gather_arrays(), q_terms, tile, qw_b, qw_l,
+            pad_len=q8.pad_len, tile_size=q8.tile_size)
+        # docids are lossless
+        np.testing.assert_array_equal(np.asarray(offs_q),
+                                      np.asarray(offs_f))
+        # impacts: within the per-query quantization step, and the
+        # unweighted impact never exceeds the exact tile max
+        valid = np.asarray(offs_f) >= 0
+        step = np.abs(np.asarray(wb_f)).max() * 2e-2 + 1e-3
+        assert np.abs(np.asarray(wb_q) - np.asarray(wb_f))[valid].max() < step
+        raw_b = np.asarray(wb_q) / np.where(qw_b[:, None] > 0,
+                                            qw_b[:, None], 1.0)
+        cap = tm_b[q_terms, tile][:, None] + 1e-6
+        assert np.all(raw_b[valid] <= np.broadcast_to(cap, raw_b.shape)[valid])
+
+
+@pytest.mark.parametrize("traversal,use_kernel",
+                         [("full", False), ("full", True),
+                          ("chunked", False), ("chunked", True),
+                          ("chunked_fused", True)])
+def test_retrieve_parity_fp32_vs_q8(setup, traversal, use_kernel):
+    corpus, fp32, q8 = setup
+    p = twolevel.original(gamma=0.05)  # rank-safe
+    kw = dict(k=K, traversal=traversal,
+              chunk_tiles=2 if traversal != "full" else None)
+    rf = retrieve_batched(fp32, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, use_kernel=use_kernel, **kw)
+    rq = retrieve_batched(q8, corpus.queries, corpus.q_weights_b,
+                          corpus.q_weights_l, p, use_kernel=use_kernel, **kw)
+    assert _overlap(rq.ids, rf.ids) >= 0.95
+    # scores differ only by the quantization step
+    np.testing.assert_allclose(rq.scores, rf.scores, rtol=5e-2, atol=5e-2)
+
+
+def test_kernel_decode_matches_jnp_decode(setup):
+    """Both q8 scorers decode the same integers — the Pallas in-kernel
+    decode must agree with the jnp gather decode bit-for-bit on ids and
+    to float tolerance on scores."""
+    corpus, _, q8 = setup
+    p = twolevel.fast()
+    r_jnp = retrieve_batched(q8, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, p, use_kernel=False, k=K)
+    r_pal = retrieve_batched(q8, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, p, use_kernel=True, k=K)
+    np.testing.assert_array_equal(r_pal.ids, r_jnp.ids)
+    np.testing.assert_allclose(r_pal.scores, r_jnp.scores,
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_sequential_engine_on_q8(setup):
+    corpus, fp32, q8 = setup
+    p = twolevel.fast()
+    rf = retrieve_sequential(fp32, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, p, k=K)
+    rq = retrieve_sequential(q8, corpus.queries, corpus.q_weights_b,
+                             corpus.q_weights_l, p, k=K)
+    assert _overlap(rq.ids, rf.ids) >= 0.95
+
+
+@pytest.mark.parametrize("engine,opts", [
+    ("batched", {}),
+    ("batched", {"traversal": "chunked", "chunk_tiles": 2}),
+    ("kernel", {}),
+    ("sequential", {}),
+    ("sharded", {"n_shards": 3}),
+    ("sharded", {"n_shards": 2, "traversal": "chunked", "chunk_tiles": 2,
+                 "exchange_every": 1}),
+])
+def test_registry_engines_serve_q8(setup, engine, opts):
+    """Every sparse registry engine opens on the compressed index and
+    agrees with the batched fp32 reference."""
+    corpus, fp32, q8 = setup
+    p = twolevel.original(gamma=0.05)
+    queries = dict(terms=corpus.queries, weights_b=corpus.q_weights_b,
+                   weights_l=corpus.q_weights_l)
+    ref = Retriever.open(fp32, p, engine="batched").search(k=K, **queries)
+    r = Retriever.open(q8, p, engine=engine, **opts)
+    resp = r.search(k=K, **queries)
+    assert _overlap(resp.ids, ref.ids) >= 0.95
+
+
+@pytest.mark.parametrize("engine", ["cascade", "rrf"])
+def test_hybrid_engines_serve_q8(engine):
+    """cascade/rrf with the compressed index as the sparse first stage:
+    the second stage is exact (dense), so results match the fp32-hybrid
+    lane whenever the candidate sets agree."""
+    graded = make_graded_corpus(n_docs=1024, n_terms=256, n_queries=6,
+                                dim=16, seed=3)
+    merged = graded.corpus.merged("scaled")
+    h_fp32 = build_hybrid(graded, tile_size=128)
+    h_q8 = build_hybrid(graded, tile_size=128,
+                        sparse_index=compress_index(merged, tile_size=128))
+    p = twolevel.fast()
+    queries = graded.queries()
+    ref = Retriever.open(h_fp32, p, engine=engine, depth=50
+                         ).search(k=K, **queries)
+    resp = Retriever.open(h_q8, p, engine=engine, depth=50
+                          ).search(k=K, **queries)
+    assert _overlap(resp.ids, ref.ids) >= 0.9
+
+
+def test_save_load_roundtrip(setup, tmp_path):
+    corpus, _, q8 = setup
+    path = tmp_path / "index.npz"
+    q8.save(path)
+    back = CompressedImpactIndex.load(path)
+    for name in ("packed", "qb", "ql", "tile_ptr", "pack_ptr", "width",
+                 "first", "scale_b", "zero_b", "scale_l", "zero_l",
+                 "tile_max_b", "tile_max_l", "sigma_b", "sigma_l"):
+        np.testing.assert_array_equal(np.asarray(getattr(back, name)),
+                                      np.asarray(getattr(q8, name)))
+    assert (back.n_docs, back.nnz, back.pad_len) == \
+        (q8.n_docs, q8.nnz, q8.pad_len)
+    p = twolevel.fast()
+    a = retrieve_batched(q8, corpus.queries, corpus.q_weights_b,
+                         corpus.q_weights_l, p, k=K)
+    b = retrieve_batched(back, corpus.queries, corpus.q_weights_b,
+                         corpus.q_weights_l, p, k=K)
+    np.testing.assert_array_equal(a.ids, b.ids)

@@ -1,0 +1,190 @@
+"""Round-trip and bound-safety tests for the compression primitives in
+``repro.index.codec`` — the contract every decode path (jnp gather,
+Pallas in-kernel, streaming builder) is built on:
+
+- delta + bit-pack: strictly-increasing tile-local offsets -> (first,
+  gap-1 at a per-run width from {1,2,4,8,16}) -> bit-identical offsets
+  back, for every width and for runs packed together into one word
+  stream (word alignment keeps runs self-contained);
+- int8 quantization: ``fl(zero + scale * q) <= max(run)`` in exact
+  float32 for every code — the property that keeps the *exact* fp32 tile
+  maxima valid upper bounds, so chunk scheduling and theta pruning are
+  untouched by compression.
+
+Deterministic seeded cases run always; the hypothesis generalizations
+run when hypothesis is installed (optional dev dependency).
+"""
+import numpy as np
+import pytest
+
+from repro.index import codec
+
+
+def _roundtrip_runs(rng, n_runs, max_count, max_gap):
+    """Encode random runs the way encode_runs does; return per-run
+    (offsets, decoded) pairs."""
+    counts = rng.integers(0, max_count + 1, size=n_runs)
+    runs = []
+    for c in counts:
+        gaps = rng.integers(1, max_gap + 1, size=max(c - 1, 0))
+        start = int(rng.integers(0, 64))
+        offs = start + np.concatenate(([0], np.cumsum(gaps)))[:c]
+        runs.append(offs.astype(np.int64))
+    enc = [codec.delta_encode(o) for o in runs]
+    maxv = np.array([int(v.max(initial=0)) for _, v in enc])
+    width = codec.choose_width(maxv)
+    words = codec.words_for(np.maximum(counts - 1, 0), width)
+    word_start = np.concatenate(([0], np.cumsum(words)))[:-1]
+    vals = np.concatenate([v for _, v in enc]) if runs else np.zeros(0)
+    run_of = np.repeat(np.arange(n_runs), np.maximum(counts - 1, 0))
+    val_idx = np.concatenate([np.arange(max(c - 1, 0)) for c in counts])
+    packed = codec.pack_runs(vals, run_of, val_idx, width, word_start)
+    out = []
+    for r, offs in enumerate(runs):
+        if counts[r] == 0:
+            out.append((offs, offs))
+            continue
+        gaps = codec.unpack_run(packed, int(word_start[r]), int(width[r]),
+                                int(counts[r] - 1))
+        out.append((offs, codec.delta_decode(enc[r][0], gaps)))
+    return out
+
+
+def test_choose_width_boundaries():
+    vals = np.array([0, 1, 2, 3, 4, 15, 16, 255, 256, 0xFFFF])
+    want = np.array([1, 1, 2, 2, 4, 4, 8, 8, 16, 16])
+    np.testing.assert_array_equal(codec.choose_width(vals), want)
+    with pytest.raises(ValueError, match="exceeds 16 bits"):
+        codec.choose_width(np.array([0x10000]))
+
+
+def test_widths_divide_words():
+    # the single-word decode (no two-word stitching) relies on this
+    for w in codec.WIDTHS:
+        assert 32 % w == 0
+
+
+def test_delta_roundtrip_identity():
+    offs = np.array([3, 4, 9, 100, 101])
+    first, vals = codec.delta_encode(offs)
+    assert first == 3
+    np.testing.assert_array_equal(codec.delta_decode(first, vals), offs)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        codec.delta_encode(np.array([5, 5]))
+
+
+@pytest.mark.parametrize("max_gap", [1, 2, 9, 250, 60000])
+def test_pack_unpack_roundtrip_all_widths(max_gap):
+    rng = np.random.default_rng(max_gap)
+    for offs, dec in _roundtrip_runs(rng, n_runs=50, max_count=40,
+                                     max_gap=max_gap):
+        np.testing.assert_array_equal(dec, offs)
+
+
+def test_pack_runs_word_aligned():
+    # two runs: widths 1 and 16; run 1 must start on a fresh word even
+    # though run 0 occupies two bits of its word
+    width = np.array([1, 16], dtype=np.uint8)
+    word_start = np.array([0, 1])
+    packed = codec.pack_runs(np.array([1, 1, 300]), np.array([0, 0, 1]),
+                             np.array([0, 1, 0]), width, word_start)
+    assert codec.unpack_run(packed, 0, 1, 2).tolist() == [1, 1]
+    assert codec.unpack_run(packed, 1, 16, 1).tolist() == [300]
+
+
+def test_fp16_down_is_lower_bound():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 70000, size=4096).astype(np.float32)
+    with np.errstate(over="ignore"):  # >65504 intentionally overflows fp16
+        h = codec.fp16_down(x)
+    assert h.dtype == np.float16
+    assert np.all(h.astype(np.float32) <= x)
+    # exact fp16 values pass through unchanged
+    exact = np.float32(0.5)
+    assert codec.fp16_down(exact) == np.float16(0.5)
+
+
+def test_quantize_bound_safety_and_accuracy():
+    rng = np.random.default_rng(1)
+    n_runs = 256
+    counts = rng.integers(0, 64, size=n_runs)
+    run_of = np.repeat(np.arange(n_runs), counts)
+    w = rng.gamma(2.0, 1.5, size=counts.sum()).astype(np.float32)
+    q, scale, zero = codec.quantize_runs(w, run_of, n_runs)
+
+    mx = np.full(n_runs, -np.inf, np.float32)
+    np.maximum.at(mx, run_of, w)
+    # the bound the pruning math depends on: dequant never exceeds the
+    # exact run max — for the *stored* codes and for every q <= 255
+    deq = codec.dequantize(q, scale[run_of], zero[run_of])
+    assert np.all(deq <= mx[run_of])
+    deq_top = codec.dequantize(np.full(counts.sum(), 255, np.uint8),
+                               scale[run_of], zero[run_of])
+    assert np.all(deq_top <= mx[run_of])
+    # reconstruction error ~ one quantization step (the fp16 round-down
+    # of scale/zero can cost up to one extra ulp each, hence 2x + rel)
+    s32 = scale.astype(np.float32)[run_of]
+    assert np.all(np.abs(deq - w)
+                  <= 2 * np.maximum(s32, 1e-6) + 1e-3 * np.abs(w) + 1e-6)
+
+
+def test_quantize_empty_and_constant_runs():
+    # run 0 empty, run 1 constant: scale 0, dequant == fp16_down(value)
+    w = np.array([2.5, 2.5, 2.5], np.float32)
+    q, scale, zero = codec.quantize_runs(w, np.array([1, 1, 1]), 2)
+    assert scale[0] == 0 and zero[0] == 0
+    assert scale[1] == 0
+    np.testing.assert_array_equal(
+        codec.dequantize(q, scale[1], zero[1]), np.full(3, 2.5, np.float32))
+
+
+# -- hypothesis generalizations (optional dev dependency) -------------------
+# guarded import (not module-level importorskip: the deterministic tests
+# above must run even without hypothesis installed)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):  # pragma: no cover - placeholders keep defs valid
+        return lambda f: f
+
+    settings, st = given, None
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+                                "(pip install hypothesis)")
+
+
+@needs_hypothesis
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=0x10000),
+                min_size=1, max_size=64) if HAVE_HYPOTHESIS else None,
+       st.integers(min_value=0, max_value=0xFF) if HAVE_HYPOTHESIS else None)
+def test_prop_delta_pack_roundtrip(gaps, start):
+    offs = start + np.concatenate(([0], np.cumsum(gaps)))[:len(gaps)]
+    offs = offs.astype(np.int64)
+    first, vals = codec.delta_encode(offs)
+    width = int(codec.choose_width(np.array([int(vals.max(initial=0))]))[0])
+    packed = codec.pack_runs(vals, np.zeros(len(vals), np.int64),
+                             np.arange(len(vals)),
+                             np.array([width], np.uint8), np.array([0]))
+    dec = codec.delta_decode(first,
+                             codec.unpack_run(packed, 0, width, len(vals)))
+    np.testing.assert_array_equal(dec, offs)
+
+
+@needs_hypothesis
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e4, width=32,
+                          allow_nan=False),
+                min_size=1, max_size=64) if HAVE_HYPOTHESIS else None)
+def test_prop_quantize_never_exceeds_run_max(ws):
+    w = np.asarray(ws, np.float32)
+    q, scale, zero = codec.quantize_runs(w, np.zeros(len(w), np.int64), 1)
+    deq = codec.dequantize(q, scale[0], zero[0])
+    assert np.all(deq <= w.max())
+    assert np.all(np.abs(deq - w)
+                  <= 2 * max(float(scale[0]), 1e-6) + 1e-3 * np.abs(w) + 1e-6)
