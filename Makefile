@@ -4,8 +4,8 @@
 PY      := python
 PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
-.PHONY: test test-fast test-slow test-api test-serve test-stress \
-    test-traversal \
+.PHONY: test test-fast test-slow test-api test-serve test-faults \
+    test-stress test-traversal \
         test-quality test-index tier1 bench-smoke
 
 test: test-fast test-slow
@@ -31,6 +31,14 @@ test-api:
 test-serve:
 	$(PYTEST) -m "not slow and not stress" tests/test_scheduler.py \
 	    tests/test_executor.py tests/test_serve_edges.py
+
+# Fault-tolerance fast lane: deadlines, retries + hedging, breakers +
+# degraded mode, generation-safe hot swap, and the fault-injection soak
+# — all on a simulated clock, so the whole suite runs in seconds (the
+# quickest signal when touching serve/health.py, serve/faults.py, or
+# the scheduler's fault paths).
+test-faults:
+	$(PYTEST) tests/test_faults.py
 
 # Multi-worker saturation soaks: executor pools under overload with
 # shedding and concurrent submitters (threaded, timing-sensitive — kept

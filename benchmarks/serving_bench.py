@@ -18,7 +18,13 @@ writes ``BENCH_serving.json`` (repo root by default):
 
 then sweeps the **executor pool** (1/2/4/8 workers, bounded admission
 with load-shedding and priority aging) over the same stream — the
-QPS-vs-executors curve. Every config records QPS/MRT/P99 plus the
+QPS-vs-executors curve — and finally records the **degraded-mode
+lane**: the same deadline-carrying stream on a 2-worker pool, healthy
+vs with executor 0 persistently fault-injected (every one of its
+batches fails, retried on the survivor; the breaker opens and routes
+rewrite to the fallback lane). Goodput (in-deadline completions/s) is
+reported next to QPS for both, which is the pair the deadline
+machinery exists for. Every config records QPS/MRT/P99 plus the
 scheduler's cache-hit, routing, admission (admitted/shed/rejected) and
 per-executor counters, and the grid warmup time. Jit caches are warmed
 before timing (a discarded scheduler for the sync configs; the pool's
@@ -41,9 +47,10 @@ import pathlib
 
 from repro.core import build_index, twolevel
 from repro.data import make_corpus
-from repro.serve import (AsyncRetrievalScheduler, SchedulerConfig,
-                         mixed_request_stream, run_workload, single_route,
-                         table8_policy)
+from repro.serve import (AsyncRetrievalScheduler, Fault, FaultPlan,
+                         HealthConfig, RetryPolicy, RoutingPolicy,
+                         SchedulerConfig, mixed_request_stream, route,
+                         run_workload, single_route, table8_policy)
 
 try:  # package-relative when driven by benchmarks.run
     from .common import emit
@@ -70,6 +77,24 @@ EXECUTOR_SWEEP = (1, 2, 4, 8)
 ADMISSION_LIMIT = 8 * MAX_BATCH   # bounded queue: saturation sheds,
 ADMISSION_POLICY = "shed"         # so the median stays bounded and the
 AGING_MS = 50.0                   # tail (P99) absorbs the overload
+DEADLINE_MS = 500.0               # degraded-mode lane: goodput budget
+DEGRADED_EXECUTORS = 2            # one faulted, one survivor
+
+
+def _fallback_policy() -> RoutingPolicy:
+    """Table-8 routing plus a cheaper fallback lane per class (coarser
+    chunked traversal, same padded width), for the degraded-mode lane:
+    while the faulted executor's breaker is open, the router rewrites
+    both classes to their fallback and responses come back flagged."""
+    return RoutingPolicy(
+        (route("short", 4, "batched", pad_terms=4, traversal="chunked",
+               chunk_tiles=2, fallback="short_fast"),
+         route("long", None, "batched", fallback="long_fast")),
+        fallback_routes=(
+            route("short_fast", None, "batched", pad_terms=4,
+                  traversal="chunked", chunk_tiles=8),
+            route("long_fast", None, "batched", traversal="chunked",
+                  chunk_tiles=16)))
 
 
 def _requests(corpus, n: int) -> list:
@@ -115,6 +140,39 @@ def collect() -> dict:
             stats = run_workload(sched, _requests(corpus, N_REQUESTS),
                                  qps=QPS, seed=3)
         sweep[f"executors_{n_exec}"] = _row(stats, executors=n_exec)
+    degraded = {}
+    for lane, faulted in (("healthy", False), ("faulted", True)):
+        faults = None
+        if faulted:
+            # every batch attempt on executor 0 fails (retryable): the
+            # retry policy requeues onto the survivor, the breaker opens
+            # after the threshold, and routes rewrite to the fallback
+            faults = FaultPlan(
+                [Fault("fail", executor=0, times=None)], wall=True)
+        sched = AsyncRetrievalScheduler(
+            index, params,
+            SchedulerConfig(max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+                            cache_size=0, executors=DEGRADED_EXECUTORS,
+                            retry=RetryPolicy(max_attempts=4,
+                                              backoff_ms=2.0),
+                            health=HealthConfig(failure_threshold=3,
+                                                cooldown_ms=200.0)),
+            routing=_fallback_policy(), faults=faults)
+        with sched:
+            stats = run_workload(
+                sched, mixed_request_stream(
+                    corpus, N_REQUESTS, short_len=SHORT_LEN,
+                    k_pool=K_POOL, deadline_ms=DEADLINE_MS),
+                qps=QPS, seed=3)
+        row = _row(stats, executors=DEGRADED_EXECUTORS)
+        row.update({
+            "deadline_ms": DEADLINE_MS,
+            "expired": stats["expired"], "failed": stats["failed"],
+            "retries": stats["retries"],
+            "degraded_batches": stats["degraded_batches"],
+            "breakers": {str(k): v["state"]
+                         for k, v in stats["breakers"].items()}})
+        degraded[lane] = row
     return {"meta": {"corpus": "splade_like", "n_docs": N_DOCS,
                      "n_terms": N_TERMS, "n_queries": N_QUERIES,
                      "tile_size": TILE, "n_requests": N_REQUESTS,
@@ -129,15 +187,26 @@ def collect() -> dict:
                                      "a worker busy for a batch's whole "
                                      "service time, so on a 1-core host "
                                      "the QPS-vs-executors curve is flat",
+                     "deadline_ms": DEADLINE_MS,
+                     "degraded_note": "degraded_mode lanes run the same "
+                                      "deadline-carrying stream on a "
+                                      f"{DEGRADED_EXECUTORS}-worker pool; "
+                                      "'faulted' persistently fails every "
+                                      "batch on executor 0 (retried, "
+                                      "breaker opens, routes fall back), "
+                                      "'healthy' is the control",
                      "p99_note": f"p99_ms over {N_REQUESTS} requests is a "
                                  "true percentile (n >= 100)"},
-            "configs": configs, "executor_sweep": sweep}
+            "configs": configs, "executor_sweep": sweep,
+            "degraded_mode": degraded}
 
 
 def _row(stats: dict, executors: int) -> dict:
     return {
         "n": stats["n"], "qps_offered": QPS,
         "qps_achieved": round(stats["qps_achieved"], 2),
+        "goodput_qps": round(stats["goodput_qps"], 2),
+        "n_in_deadline": stats["n_in_deadline"],
         "mrt_ms": round(stats["mrt_ms"], 3),
         "p50_ms": round(stats["p50_ms"], 3),
         "p99_ms": round(stats["p99_ms"], 3),
@@ -159,12 +228,15 @@ def _row(stats: dict, executors: int) -> dict:
 def run(out) -> None:
     data = collect()
     rows = {**data["configs"],
-            **{f"pool/{k}": v for k, v in data["executor_sweep"].items()}}
+            **{f"pool/{k}": v for k, v in data["executor_sweep"].items()},
+            **{f"degraded_mode/{k}": v
+               for k, v in data["degraded_mode"].items()}}
     for name, row in rows.items():
         out(emit(f"serving/{name}", row["mrt_ms"],
                  {k: v for k, v in row.items()
                   if k not in ("mrt_ms", "requests_by_route",
-                               "batches_by_group", "batches_by_executor")}))
+                               "batches_by_group", "batches_by_executor",
+                               "breakers")}))
 
 
 def main() -> None:
@@ -191,6 +263,13 @@ def main() -> None:
               f"qps={row['qps_achieved']:6.1f} "
               f"admitted={row['admitted']} shed={row['shed']} "
               f"warmup={row['warmup_s']:.2f}s")
+    for name, row in data["degraded_mode"].items():
+        print(f"degraded/{name:7s} MRT={row['mrt_ms']:8.2f}ms "
+              f"qps={row['qps_achieved']:6.1f} "
+              f"goodput={row['goodput_qps']:6.1f} "
+              f"retries={row['retries']} "
+              f"degraded_batches={row['degraded_batches']} "
+              f"expired={row['expired']} breakers={row['breakers']}")
     print(f"wrote {path}")
 
 

@@ -53,9 +53,9 @@ def main() -> None:
     from repro.core import build_index, twolevel
     from repro.data import make_corpus
     from repro.retrieval import SearchRequest, engine_names
-    from repro.serve import (AsyncRetrievalScheduler, SchedulerConfig,
-                             make_shard_mesh, run_workload, single_route,
-                             table8_policy)
+    from repro.serve import (AsyncRetrievalScheduler, RetryPolicy,
+                             SchedulerConfig, make_shard_mesh,
+                             run_workload, single_route, table8_policy)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="splade_like")
@@ -92,6 +92,22 @@ def main() -> None:
                     help="priority aging: a queued request gains one "
                          "priority level per this many ms waited "
                          "(0 = strict priority)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: still-queued requests "
+                         "are shed when the budget runs out, and the "
+                         "workload reports goodput next to QPS")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="max execution attempts per batch (0/1 = fail "
+                         "on first error); failed batches requeue with "
+                         "deterministic exponential backoff")
+    ap.add_argument("--hedge", type=float, default=0.0,
+                    help="hedge straggler batches after this many ms "
+                         "in flight (0 = off; needs --executors >= 2); "
+                         "first result wins")
+    ap.add_argument("--swap-demo", action="store_true",
+                    help="hot-swap demo: rebuild the index mid-stream "
+                         "and swap it in behind the two-phase gate, "
+                         "then report the generation + cache evictions")
     ap.add_argument("--shards", type=int, default=1,
                     help="partition the index over N tile-range shards "
                          "(implies --engine sharded)")
@@ -125,22 +141,40 @@ def main() -> None:
         routing = single_route(args.engine)
         print(f"# serving engine: {args.engine}")
 
+    retry = (RetryPolicy(max_attempts=args.retries)
+             if args.retries > 1 else None)
     sched = AsyncRetrievalScheduler(
         index, params,
         SchedulerConfig(max_batch=args.max_batch, cache_size=args.cache,
                         executors=args.executors,
                         admission_limit=args.admission_limit,
                         admission_policy=args.admission_policy,
-                        aging_ms=args.aging_ms),
+                        aging_ms=args.aging_ms, retry=retry,
+                        hedge_ms=args.hedge),
         routing=routing)
     rng = np.random.default_rng(0)
     k_pool = args.k_mix if args.k_mix else [args.k]
     reqs = [SearchRequest(terms=corpus.queries[i % 64],
                           weights_b=corpus.q_weights_b[i % 64],
                           weights_l=corpus.q_weights_l[i % 64],
-                          k=int(rng.choice(k_pool)))
+                          k=int(rng.choice(k_pool)),
+                          deadline_ms=args.deadline_ms)
             for i in range(args.requests)]
-    if args.executors > 0:
+    if args.swap_demo:
+        # serve half the stream, hot-swap a rebuilt index, serve the rest
+        mid = len(reqs) // 2
+        if args.executors > 0:
+            sched.start()
+        stats = run_workload(sched, reqs[:mid], qps=args.qps)
+        gen = sched.swap_index(
+            build_index(corpus.merged("scaled"), tile_size=1024))
+        print(f"# hot-swap: installed generation {gen} "
+              f"(cache evictions: "
+              f"{sched.stats()['cache_gen_evictions']})")
+        stats = run_workload(sched, reqs[mid:], qps=args.qps)
+        if args.executors > 0:
+            sched.close()
+    elif args.executors > 0:
         print(f"# executor pool: {args.executors} workers "
               f"(warming routing grid...)")
         with sched:

@@ -94,6 +94,10 @@ class SearchRequest:
     # Per-call pruning aggressiveness override (Table 3 / Fig. 3 sweeps);
     # flows into the jitted engines as a traced scalar — no recompile.
     threshold_factor: float | None = None
+    # Serving deadline, measured from scheduler submit. The scheduler
+    # sheds entries whose budget ran out before pick (the handle fails
+    # with DeadlineExceeded); engines themselves never read it.
+    deadline_ms: float | None = None
 
     def batch_size(self) -> int:
         src = self.dense if self.terms is None else self.terms
@@ -120,3 +124,8 @@ class SearchResponse:
     latencies_ms: np.ndarray | None = None
     # per-row requested depths [B] int32 (always set by the Retriever)
     ks: np.ndarray | None = None
+    # index generation that served the call (hot-swap bookkeeping; a
+    # response may never mix rows from two generations)
+    generation: int = 0
+    # True when a degraded pool served this via a fallback route
+    degraded: bool = False

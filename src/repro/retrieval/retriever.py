@@ -77,16 +77,19 @@ class Retriever:
     layers call through (and later scaling work plugs into)."""
 
     def __init__(self, engine, params: TwoLevelParams,
-                 k_buckets=K_BUCKETS):
+                 k_buckets=K_BUCKETS, generation: int = 0):
         self.engine = engine
         self.params = params
         # sorted: bucket_k picks the first bucket >= k in iteration order
         self.k_buckets = tuple(sorted(k_buckets)) if k_buckets else None
+        # index generation tag: bumped by the serving hot-swap gate and
+        # stamped on every response so stale replicas are detectable
+        self.generation = generation
 
     @classmethod
     def open(cls, index, params: TwoLevelParams | None = None,
              engine: str = "batched", *, k_buckets=K_BUCKETS,
-             **engine_opts) -> "Retriever":
+             generation: int = 0, **engine_opts) -> "Retriever":
         """Build a retriever: ``index`` + pruning ``params`` + an engine
         name from the registry. ``index`` may be a fp32
         ``BlockedImpactIndex``, a ``repro.index.CompressedImpactIndex``
@@ -96,7 +99,7 @@ class Retriever:
         ``"sharded"``, ``warmup=False`` for ``"sequential"``)."""
         params = params if params is not None else TwoLevelParams()
         eng = get_engine(engine)(index, params, **engine_opts)
-        return cls(eng, params, k_buckets=k_buckets)
+        return cls(eng, params, k_buckets=k_buckets, generation=generation)
 
     @property
     def engine_name(self) -> str:
@@ -115,7 +118,8 @@ class Retriever:
                 f"engine {self.engine_name!r} does not support replica "
                 f"cloning (no .replicate); executor pools need it")
         return Retriever(replicate(self.params), self.params,
-                         k_buckets=self.k_buckets)
+                         k_buckets=self.k_buckets,
+                         generation=self.generation)
 
     def search(self, request: SearchRequest | None = None, *,
                terms=None, weights_b=None, weights_l=None, dense=None,
@@ -176,4 +180,5 @@ class Retriever:
             ids=ids, scores=scores,
             engine=self.engine_name, k=k_req, k_exec=k_exec,
             stats=res.stats, latency_ms=latency_ms,
-            latencies_ms=res.latencies_ms, ks=ks)
+            latencies_ms=res.latencies_ms, ks=ks,
+            generation=self.generation)

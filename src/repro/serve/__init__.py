@@ -1,11 +1,18 @@
 from .engine import (RetrievalServer, Request,  # noqa: F401
                      ServerConfig)
-from .executor import ExecutorPool  # noqa: F401
+from .executor import ExecutorPool, ReplicaMap  # noqa: F401
+from .faults import (Fault, FaultPlan, InjectedDeath,  # noqa: F401
+                     InjectedFault, delay_route, fail_batch,
+                     kill_executor, poison_generation)
+from .health import (BREAKER_CLOSED, BREAKER_DEAD,  # noqa: F401
+                     BREAKER_HALF_OPEN, BREAKER_OPEN, HealthConfig,
+                     HealthMonitor, RetryPolicy)
 from .router import (Route, RoutingPolicy, query_length, route,  # noqa: F401
                      single_route, table8_policy, warmup_grid)
 from .scheduler import (ADMISSION_POLICIES,  # noqa: F401
-                        AsyncRetrievalScheduler, SchedulerConfig,
-                        SchedulerSaturated, SearchHandle,
+                        CACHE_ADMISSIONS, AsyncRetrievalScheduler,
+                        DeadlineExceeded, SchedulerConfig,
+                        SchedulerSaturated, SearchHandle, SearchTimeout,
                         aggregate_latencies, mixed_request_stream,
                         run_workload, truncate_terms)
 from .sharded import (ShardedRetrievalServer, make_shard_mesh,  # noqa: F401

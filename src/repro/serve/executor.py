@@ -26,6 +26,20 @@ exiting — close-time backlog still runs on all N replicas
 concurrently, and every outstanding ``SearchHandle`` resolves before
 ``close`` returns.
 
+Fault tolerance hooks (``serve.health`` / ``serve.faults``): before
+picking, a worker consults its circuit breaker
+(``scheduler.health.allow``) — an open breaker idles the slot until
+its half-open probe is due — and the fault plan's ``on_pick`` (a
+scripted ``die`` fault unwinds the thread here, *outside* batch
+execution). A worker that dies this way is reported to the scheduler
+(``executor_deaths`` / ``dead_executors`` in ``stats()``) and its
+breaker goes terminally dead; the remaining workers keep serving.
+When the queue is idle, a worker hedges straggler batches running on
+*other* slots (``scheduler.hedge_due``) — first result wins. Replica
+maps are generation-tagged (:class:`ReplicaMap`): after an index
+hot-swap, the next resolve clears and rebuilds them from the new
+masters, so the flip needs no pool restart.
+
 Determinism: N executors produce bit-identical responses to the
 single-worker path. A picked batch is an ordered list of whole
 requests executed in one ``search`` call; which *replica* runs it
@@ -37,6 +51,17 @@ from __future__ import annotations
 
 import threading
 import time
+
+
+class ReplicaMap(dict):
+    """One slot's {route_name: Retriever replica} map, tagged with the
+    index generation it was replicated from. The scheduler's
+    ``_resolve_retriever`` clears + rebuilds a map whose generation
+    trails the installed index — the lazy half of the hot-swap gate."""
+
+    def __init__(self, *args, generation: int = 0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.generation = generation
 
 
 class ExecutorPool:
@@ -56,10 +81,10 @@ class ExecutorPool:
         self.n_executors = n_executors
         self._do_warmup = warmup
         self._threads: list[threading.Thread] = []
-        # slot -> {route_name: Retriever replica}; built at start() so
-        # the first picked batch never pays replication, extended lazily
-        # by _execute if a route first appears after start
-        self.replicas: dict[int, dict] = {}
+        # slot -> ReplicaMap; built at start() so the first picked batch
+        # never pays replication, extended lazily by _execute if a route
+        # first appears after start, rebuilt after an index hot-swap
+        self.replicas: dict[int, ReplicaMap] = {}
         self._stop = False
         self._drain = True
 
@@ -75,9 +100,10 @@ class ExecutorPool:
         if self._do_warmup:
             sched.warmup()
         for slot in range(self.n_executors):
-            self.replicas[slot] = {
-                r.name: sched._retriever(r.name).replicate()
-                for r in sched.routing.routes}
+            self.replicas[slot] = ReplicaMap(
+                {r.name: sched._retriever(r.name).replicate()
+                 for r in sched.routing.all_routes},
+                generation=sched.generation)
         self._stop = False
         self._drain = True
         self._threads = [
@@ -101,12 +127,32 @@ class ExecutorPool:
             t.join()
         self._threads = []
 
+    def swap_index(self, index, params=None, *, warm: bool = True) -> int:
+        """Install a rebuilt index as a new generation without stopping
+        the pool — delegates to
+        :meth:`AsyncRetrievalScheduler.swap_index` (warm the new grid,
+        flip masters between batches); each slot's :class:`ReplicaMap`
+        rebuilds itself on its next resolve."""
+        return self.scheduler.swap_index(index, params, warm=warm)
+
     def _run(self, slot: int) -> None:
-        """One executor's loop: pick a due batch (under the scheduler
-        lock), execute it on this slot's replicas (outside it), repeat;
-        park on the condition until the next deadline when idle."""
+        """One executor's loop (see :meth:`_serve`): any escape that is
+        not a normal return is a thread death *outside* batch execution
+        — no handle is stranded by it, but the operator must see it."""
+        try:
+            self._serve(slot)
+        except BaseException as exc:  # noqa: BLE001 — liveness accounting
+            self.scheduler._record_executor_death(slot, exc)
+
+    def _serve(self, slot: int) -> None:
+        """Pick a due batch (under the scheduler lock), execute it on
+        this slot's replicas (outside it), repeat; when idle, hedge a
+        straggler batch from another slot or park on the condition
+        until the next deadline. A slot whose breaker is open idles
+        until its half-open probe is due (drain waives the gate so
+        ``close`` can never hang on a broken breaker)."""
         sched = self.scheduler
-        retrievers = self.replicas.setdefault(slot, {})
+        retrievers = self.replicas.setdefault(slot, ReplicaMap())
         while True:
             force = False
             with sched._cond:
@@ -114,14 +160,37 @@ class ExecutorPool:
                     if not self._drain or not sched._groups:
                         return
                     force = True   # drain: waive deadlines, take the rest
-            picked = sched._pick_batch(time.perf_counter(), force)
+            if sched.faults is not None:
+                # the scripted-death hook: outside _execute's failure
+                # delivery, so a raise here unwinds the worker itself
+                sched.faults.on_pick(executor_id=slot)
+            now = time.perf_counter()
+            if not force and not sched.health.allow(slot, now):
+                with sched._cond:
+                    sched._cond.wait(timeout=0.01)
+                continue
+            picked = sched._pick_batch(now, force)
             if picked is None:
+                # idle: volunteer as the hedge executor for straggler
+                # batches whose primary is another slot
+                hedged = 0
+                for token in sched.hedge_due(now=now,
+                                             exclude_executor=slot):
+                    hedged += 1
+                    try:
+                        sched._run_attempt(token, retrievers=retrievers,
+                                           executor_id=slot)
+                    except Exception:
+                        # failed attempts resolve their own handles
+                        pass
+                if hedged:
+                    continue
                 with sched._cond:
                     if self._stop:
                         if not self._drain or not sched._groups:
                             return
                         continue   # another slot is mid-pick; retry
-                    deadlines = [e.deadline
+                    deadlines = [max(e.deadline, e.not_before)
                                  for g in sched._groups.values() for e in g]
                     wait = 0.05
                     if deadlines:

@@ -35,6 +35,8 @@ import hashlib
 
 import numpy as np
 
+from .health import RetryPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class Route:
@@ -47,6 +49,12 @@ class Route:
     width, so this is where length routing pays most (queries longer
     than the width keep their highest-impact terms, as always).
 
+    ``retry`` overrides the scheduler-wide :class:`RetryPolicy` for
+    failed batch executions of this class; ``fallback`` names a
+    *fallback lane* (a route from ``RoutingPolicy.fallback_routes``)
+    the scheduler rewrites to while the pool is degraded — the cheaper
+    engine serves, and the responses come back ``degraded=True``.
+
     ``engine_opts`` is a sorted (key, value) tuple so the Route stays
     hashable; build routes with :func:`route` to pass them as kwargs.
     """
@@ -55,6 +63,8 @@ class Route:
     engine: str = "batched"
     engine_opts: tuple = ()
     pad_terms: int | None = None       # None -> SchedulerConfig.pad_terms
+    retry: RetryPolicy | None = None   # None -> SchedulerConfig.retry
+    fallback: str | None = None        # degraded-mode lane (route name)
 
     def opts(self) -> dict:
         return dict(self.engine_opts)
@@ -65,22 +75,32 @@ class Route:
 
 def route(name: str, max_query_len: int | None = None,
           engine: str = "batched", pad_terms: int | None = None,
+          retry: RetryPolicy | None = None, fallback: str | None = None,
           **engine_opts) -> Route:
     """Declarative Route builder: kwargs become engine constructor opts
     (``traversal=``, ``chunk_tiles=``, ``n_shards=``, ...)."""
     return Route(name, max_query_len, engine,
-                 tuple(sorted(engine_opts.items())), pad_terms)
+                 tuple(sorted(engine_opts.items())), pad_terms,
+                 retry, fallback)
 
 
 @dataclasses.dataclass(frozen=True)
 class RoutingPolicy:
-    """Ordered length classes; the last route must be the catch-all."""
+    """Ordered length classes; the last route must be the catch-all.
+
+    ``fallback_routes`` are extra lanes that ``classify`` never picks —
+    they only serve as ``Route.fallback`` targets while the pool is
+    degraded. Keeping them out of ``routes`` means they don't have to
+    satisfy the catch-all/ascending-bounds ordering, but they are still
+    opened, warmed, and replicated like any primary route.
+    """
     routes: tuple[Route, ...]
+    fallback_routes: tuple[Route, ...] = ()
 
     def __post_init__(self):
         if not self.routes:
             raise ValueError("RoutingPolicy needs at least one route")
-        names = [r.name for r in self.routes]
+        names = [r.name for r in self.all_routes]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate route names: {names}")
         if self.routes[-1].max_query_len is not None:
@@ -94,6 +114,31 @@ class RoutingPolicy:
         if any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
             raise ValueError(
                 f"route max_query_len bounds must strictly ascend: {bounds}")
+        by_name = {r.name: r for r in self.all_routes}
+        for r in self.all_routes:
+            if r.fallback is None:
+                continue
+            target = by_name.get(r.fallback)
+            if target is None:
+                raise ValueError(
+                    f"route {r.name!r} falls back to unknown route "
+                    f"{r.fallback!r}; routes: {sorted(by_name)}")
+            if target.fallback is not None:
+                raise ValueError(
+                    f"fallback chains are not allowed: {r.name!r} -> "
+                    f"{target.name!r} -> {target.fallback!r}")
+            if target.pad_terms != r.pad_terms:
+                # the fallback executes the *same padded batches*, so a
+                # width mismatch would silently re-pad (and recompile)
+                raise ValueError(
+                    f"fallback route {target.name!r} must share "
+                    f"pad_terms with {r.name!r} "
+                    f"({target.pad_terms} != {r.pad_terms})")
+
+    @property
+    def all_routes(self) -> tuple[Route, ...]:
+        """Primary + fallback lanes — what warmup/replication iterate."""
+        return self.routes + self.fallback_routes
 
     def classify(self, query_len: int) -> Route:
         """First route admitting ``query_len`` (the catch-all always does)."""
@@ -103,17 +148,17 @@ class RoutingPolicy:
         raise AssertionError("unreachable: catch-all route admits all")
 
     def by_name(self, name: str) -> Route:
-        for r in self.routes:
+        for r in self.all_routes:
             if r.name == name:
                 return r
         raise KeyError(f"no route named {name!r}; routes: "
-                       f"{[r.name for r in self.routes]}")
+                       f"{[r.name for r in self.all_routes]}")
 
     def fingerprint(self, params) -> str:
         """Stable policy hash: routes + pruning policy. Part of every
         response-cache key, so two schedulers sharing a cache (or one
         scheduler after a policy swap) can never alias entries."""
-        blob = repr((self.routes, params)).encode()
+        blob = repr((self.routes, self.fallback_routes, params)).encode()
         return hashlib.sha1(blob).hexdigest()[:16]
 
 
@@ -128,7 +173,7 @@ def warmup_grid(policy: RoutingPolicy, k_buckets,
     buckets = tuple(k_buckets) if k_buckets else ()
     return tuple(
         (r, r.pad_terms if r.pad_terms is not None else default_pad_terms, b)
-        for r in policy.routes for b in buckets)
+        for r in policy.all_routes for b in buckets)
 
 
 def query_length(weights_b, weights_l) -> int:

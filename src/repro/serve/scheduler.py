@@ -38,6 +38,20 @@ truncations of the same execution for rank-safe configs, but guided
 configs are only reproducible at the exact request — the cache never
 approximates). Entries and delivered responses never share arrays.
 
+Fault tolerance (``serve.health`` / ``serve.faults``): requests may
+carry a ``deadline_ms`` — expired entries are shed at pick time
+(:class:`DeadlineExceeded`) instead of burning batch slots; failed
+batch executions requeue under a per-route :class:`RetryPolicy`
+(deterministic seeded backoff) when the fault is retryable; idle
+executors hedge straggler batches (first result wins, the loser is
+cancelled at the queue); per-executor circuit breakers take failing
+executors out of rotation and, while the pool is degraded, routes with
+a ``fallback`` lane execute there with responses flagged
+``degraded=True``. ``swap_index`` installs a rebuilt index as a new
+*generation* behind a two-phase gate (warm, then flip between
+batches); cache keys carry the generation, so a rebuild can never
+serve stale hits.
+
 Two drive modes:
 
   - synchronous: ``poll()`` dispatches every *due* micro-batch inline
@@ -63,11 +77,13 @@ import numpy as np
 from ..core.twolevel import TwoLevelParams, resolve_k
 from ..retrieval import (K_BUCKETS, Retriever, SearchRequest,
                          SearchResponse, bucket_k, resolve_ks)
+from .health import HealthConfig, HealthMonitor, RetryPolicy
 from .router import (RoutingPolicy, query_length, single_route,
                      warmup_grid)
 
 
 ADMISSION_POLICIES = ("block", "reject", "shed")
+CACHE_ADMISSIONS = ("always", "second_sight")
 
 
 class SchedulerSaturated(RuntimeError):
@@ -76,6 +92,26 @@ class SchedulerSaturated(RuntimeError):
     priority comparison under ``"shed"``); delivered through
     ``SearchHandle.result()`` for a queued request that was load-shed to
     admit a more important one."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's ``deadline_ms`` budget ran out while it was still
+    queued: the scheduler sheds it at pick time instead of spending a
+    batch slot on an answer nobody is waiting for. Delivered through
+    ``SearchHandle.result()``; counted as ``expired`` in ``stats()``."""
+
+
+class SearchTimeout(TimeoutError):
+    """``SearchHandle.result(timeout=...)`` gave up waiting. Unlike
+    :class:`DeadlineExceeded` the request itself is still live — only
+    this caller stopped waiting. Carries the handle's routing context
+    so timeout logs can say *which* lane stalled."""
+
+    def __init__(self, msg: str, route: str | None = None,
+                 k_bucket: int | None = None):
+        super().__init__(msg)
+        self.route = route
+        self.k_bucket = k_bucket
 
 
 @dataclasses.dataclass
@@ -107,6 +143,26 @@ class SchedulerConfig:
     # aging_ms waited, so strict priority cannot starve low-priority
     # traffic under a saturating high-priority stream. 0 = strict.
     aging_ms: float = 0.0
+    # -- fault tolerance (serve.health / serve.faults) -----------------------
+    # scheduler-wide retry policy for failed batch executions (a Route
+    # may override with its own); None = fail handles on first error
+    retry: RetryPolicy | None = None
+    # hedge straggler batches: an idle executor re-dispatches a batch
+    # that has been in flight longer than hedge_ms on itself; first
+    # result wins, the loser is cancelled at the queue (or discarded).
+    # 0 disables unless hedge_from_p99 derives the delay from the
+    # health monitor's recent-latency p99 (hedge_ms is then the
+    # cold-start default before any latency samples exist).
+    hedge_ms: float = 0.0
+    hedge_from_p99: bool = False
+    # per-executor breaker/EWMA configuration; None = defaults
+    health: HealthConfig | None = None
+    # -- cache lifecycle -----------------------------------------------------
+    # entries older than ttl_s are evicted on lookup; 0 = no TTL
+    cache_ttl_s: float = 0.0
+    # "always" caches every response; "second_sight" only admits a key
+    # seen before (one-hit wonders never displace a repeating query)
+    cache_admission: str = "always"
 
 
 def truncate_terms(terms, qw_b, qw_l, pad_terms: int,
@@ -135,17 +191,19 @@ class SearchHandle:
     """
 
     __slots__ = ("route", "k_bucket", "priority", "cached", "t_submit",
-                 "t_done", "_event", "_response", "_exception",
-                 "_scheduler")
+                 "t_done", "deadline_ms", "_event", "_response",
+                 "_exception", "_scheduler")
 
     def __init__(self, scheduler, route: str, k_bucket: int,
-                 priority: int, t_submit: float):
+                 priority: int, t_submit: float,
+                 deadline_ms: float | None = None):
         self.route = route
         self.k_bucket = k_bucket
         self.priority = priority
         self.cached = False
         self.t_submit = t_submit
         self.t_done = math.nan
+        self.deadline_ms = deadline_ms
         self._event = threading.Event()
         self._response: SearchResponse | None = None
         self._exception: BaseException | None = None
@@ -168,9 +226,10 @@ class SearchHandle:
                 except Exception:
                     continue
         if not self._event.wait(timeout):
-            raise TimeoutError(
+            raise SearchTimeout(
                 f"request not served within {timeout}s (route "
-                f"{self.route!r}, k-bucket {self.k_bucket})")
+                f"{self.route!r}, k-bucket {self.k_bucket})",
+                route=self.route, k_bucket=self.k_bucket)
         if self._exception is not None:
             raise self._exception
         return self._response
@@ -209,11 +268,32 @@ class _Pending:
     qw_b: np.ndarray           # [r, pad_terms] f32
     qw_l: np.ndarray           # [r, pad_terms] f32
     ks: np.ndarray             # [r] int32 per-row depth
-    cache_key: tuple | None
+    cache_key: tuple | None    # generation-free base key; gen appended
+    #                            at store/lookup time
+    expires: float = math.inf  # absolute deadline_ms expiry; shed after
+    not_before: float = -math.inf  # retry backoff: ineligible until then
+    attempts: int = 1          # execution attempts including the next one
 
     @property
     def rows(self) -> int:
         return self.terms.shape[0]
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One picked batch between pick and delivery — the unit retries,
+    hedges, and first-result-wins races are resolved on. ``outstanding``
+    counts live attempts (primary + hedges); the first ``_deliver`` pops
+    the record, so a losing attempt finds it gone and is discarded."""
+    token: int
+    key: tuple                 # (bucket, route_name, threshold_factor)
+    batch: list                # the _Pending entries
+    t_start: float
+    budget_ms: float           # min remaining deadline budget over rows
+    executor_id: int | None    # primary executor (hedges run elsewhere)
+    attempts: int = 1
+    outstanding: int = 1
+    hedged: bool = False
 
 
 class AsyncRetrievalScheduler:
@@ -227,7 +307,7 @@ class AsyncRetrievalScheduler:
     def __init__(self, index, params: TwoLevelParams | None = None,
                  cfg: SchedulerConfig | None = None, *,
                  routing: RoutingPolicy | None = None,
-                 k_buckets=K_BUCKETS):
+                 k_buckets=K_BUCKETS, faults=None):
         self.index = index
         self.params = params if params is not None else TwoLevelParams()
         self.cfg = cfg if cfg is not None else SchedulerConfig()
@@ -237,6 +317,10 @@ class AsyncRetrievalScheduler:
             raise ValueError(
                 f"admission_policy must be one of {ADMISSION_POLICIES}, "
                 f"got {self.cfg.admission_policy!r}")
+        if self.cfg.cache_admission not in CACHE_ADMISSIONS:
+            raise ValueError(
+                f"cache_admission must be one of {CACHE_ADMISSIONS}, "
+                f"got {self.cfg.cache_admission!r}")
         if self.cfg.executors < 0:
             raise ValueError(f"executors must be >= 0, "
                              f"got {self.cfg.executors}")
@@ -253,10 +337,30 @@ class AsyncRetrievalScheduler:
         self._pool = None                    # ExecutorPool when executors>0
         self._stop = False
         self._cache: OrderedDict = OrderedDict()
+        # second-sight admission ghost list: base keys seen once (LRU)
+        self._cache_seen: OrderedDict = OrderedDict()
+        # fault tolerance: per-executor health/breakers, the no-op-able
+        # fault hook, picked-batch records (retry/hedge bookkeeping),
+        # and the index generation the hot-swap gate bumps
+        self.health = HealthMonitor(self.cfg.health)
+        self.faults = faults
+        self._generation = 0
+        self._inflight: dict[int, _Inflight] = {}
+        self._inflight_seq = itertools.count()
+        self._fault_global = 0
+        self._fault_per_exec: dict = {}
+        self._dead_executors: dict = {}
         self._counts = {"submitted": 0, "completed": 0, "failed": 0,
-                        "rejected": 0, "shed": 0, "in_flight": 0,
+                        "rejected": 0, "shed": 0, "expired": 0,
+                        "in_flight": 0,
                         "batches": 0, "cache_hits": 0, "cache_misses": 0,
-                        "rows_executed": 0, "rows_padding": 0}
+                        "rows_executed": 0, "rows_padding": 0,
+                        "retries": 0, "hedges": 0, "hedges_wasted": 0,
+                        "hedges_cancelled": 0, "hedge_failures": 0,
+                        "degraded_batches": 0, "executor_deaths": 0,
+                        "swaps": 0, "cache_ttl_evictions": 0,
+                        "cache_admission_skips": 0,
+                        "cache_gen_evictions": 0}
         self._route_requests: dict[str, int] = {}
         self._group_batches: dict[str, int] = {}
         self._executor_batches: dict[int, int] = {}
@@ -268,6 +372,7 @@ class AsyncRetrievalScheduler:
     def submit(self, request: SearchRequest | None = None, *,
                terms=None, weights_b=None, weights_l=None, k=None,
                threshold_factor: float | None = None,
+               deadline_ms: float | None = None,
                priority: int = 0, now: float | None = None) -> SearchHandle:
         """Admit one request; returns its future immediately.
 
@@ -275,15 +380,22 @@ class AsyncRetrievalScheduler:
         sooner; FIFO within a priority). ``now`` overrides the admission
         timestamp (perf_counter scale) for simulated workloads. A
         response-cache hit completes the handle before returning.
+        ``deadline_ms`` bounds queueing: a request still undispatched
+        when its budget runs out is shed at pick time and its handle
+        fails with :class:`DeadlineExceeded`.
         """
         if request is None:
             request = SearchRequest(terms=terms, weights_b=weights_b,
                                     weights_l=weights_l, k=k,
-                                    threshold_factor=threshold_factor)
+                                    threshold_factor=threshold_factor,
+                                    deadline_ms=deadline_ms)
         elif any(v is not None for v in (terms, weights_b, weights_l, k,
-                                         threshold_factor)):
+                                         threshold_factor, deadline_ms)):
             raise TypeError("pass either a SearchRequest or field kwargs, "
                             "not both")
+        if request.deadline_ms is not None and request.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {request.deadline_ms}")
         if request.dense is not None:
             raise ValueError("the scheduler serves sparse engines; use a "
                              "Retriever(engine='dense') directly for dense "
@@ -311,12 +423,15 @@ class AsyncRetrievalScheduler:
         bucket = bucket_k(int(ks.max()), self.k_buckets)
         tf = (None if request.threshold_factor is None
               else float(request.threshold_factor))
-        handle = SearchHandle(self, route.name, bucket, priority, now)
+        handle = SearchHandle(self, route.name, bucket, priority, now,
+                              deadline_ms=request.deadline_ms)
         key = None
         if self.cfg.cache_size > 0:
             # per-row depths are part of the key, so the same query at
             # different k within one bucket keeps separate entries
-            # instead of thrashing a single slot
+            # instead of thrashing a single slot; the index generation
+            # is appended at lookup/store time, so a hot-swap atomically
+            # orphans every pre-swap entry
             key = (self._fingerprint(q_terms, qw_b, qw_l, tf),
                    self._policy_fp, bucket, ks.tobytes())
         n_rows = q_terms.shape[0]
@@ -329,21 +444,38 @@ class AsyncRetrievalScheduler:
             self._route_requests[route.name] = (
                 self._route_requests.get(route.name, 0) + 1)
             if key is not None:
-                hit = self._cache.get(key)
+                hit = self._cache_lookup_locked(key, now)
                 if hit is not None:
-                    self._cache.move_to_end(key)
                     self._counts["cache_hits"] += 1
                     self._counts["completed"] += 1
                     handle._complete(self._detach(hit, latency_ms=0.0),
                                      t_done=now, cached=True)
                     return handle
                 self._counts["cache_misses"] += 1
+        expires = (math.inf if request.deadline_ms is None
+                   else now + request.deadline_ms / 1e3)
         entry = _Pending(
             seq=next(self._seq), priority=priority,
-            deadline=now + self.cfg.max_wait_ms / 1e3, handle=handle,
-            terms=q_terms, qw_b=qw_b, qw_l=qw_l, ks=ks, cache_key=key)
+            deadline=min(now + self.cfg.max_wait_ms / 1e3, expires),
+            handle=handle, terms=q_terms, qw_b=qw_b, qw_l=qw_l, ks=ks,
+            cache_key=key, expires=expires)
         self._admit(entry, (bucket, route.name, tf), now)
         return handle
+
+    def _cache_lookup_locked(self, base_key: tuple, now: float):
+        """Current-generation cache hit for ``base_key``, honoring TTL
+        (an over-age entry is evicted and counts as a miss)."""
+        full = base_key + (self._generation,)
+        slot = self._cache.get(full)
+        if slot is None:
+            return None
+        resp, stored_at = slot
+        if 0 < self.cfg.cache_ttl_s < (now - stored_at):
+            del self._cache[full]
+            self._counts["cache_ttl_evictions"] += 1
+            return None
+        self._cache.move_to_end(full)
+        return resp
 
     # -- backpressure --------------------------------------------------------
 
@@ -382,9 +514,13 @@ class AsyncRetrievalScheduler:
                 if self.cfg.admission_policy == "shed":
                     self._shed_for_locked(entry, group_key, now)
                     return
-                # "block": wait for the queue to drain
+                # "block": wait for the queue to drain. Completion,
+                # shed, expiry, and pick all notify the condition, so
+                # this wakes the moment space exists — the timeout is
+                # only a backstop against a lost wakeup, not a poll
+                # interval that quantizes admission latency.
                 if self.is_running():
-                    self._cond.wait(timeout=0.05)
+                    self._cond.wait(timeout=1.0)
                     continue
             # sync mode, no worker to drain the queue: dispatch inline
             # (outside the lock) and retry admission
@@ -487,9 +623,30 @@ class AsyncRetrievalScheduler:
                     retr = Retriever.open(self.index, self.params,
                                           engine=route.engine,
                                           k_buckets=self.k_buckets,
+                                          generation=self._generation,
                                           **route.opts())
                     self._retrievers[route_name] = retr
         return retr
+
+    def _resolve_retriever(self, route_name: str,
+                           retrievers: dict | None) -> tuple:
+        """(retriever, generation) for one attempt. With a replica map
+        (executor pool), a map left behind by a hot-swap is cleared and
+        rebuilt from the new masters before use — the generation check
+        is what makes the flip safe without stopping the pool."""
+        if retrievers is None:
+            retr = self._retriever(route_name)
+            return retr, retr.generation
+        with self._lock:
+            gen = self._generation
+        if getattr(retrievers, "generation", gen) != gen:
+            retrievers.clear()
+            retrievers.generation = gen
+        retr = retrievers.get(route_name)
+        if retr is None:
+            retr = self._retriever(route_name).replicate()
+            retrievers[route_name] = retr
+        return retr, retr.generation
 
     # -- dispatch ------------------------------------------------------------
 
@@ -498,11 +655,13 @@ class AsyncRetrievalScheduler:
             return sum(len(g) for g in self._groups.values())
 
     def next_deadline(self) -> float | None:
-        """Earliest dispatch deadline among pending requests (absolute
-        perf_counter time), or None when the queue is idle."""
+        """Earliest actionable time among pending requests (absolute
+        perf_counter time), or None when the queue is idle. An entry in
+        retry backoff is not actionable before ``not_before``, so the
+        sync driver never busy-spins on a backing-off queue."""
         with self._lock:
-            deadlines = [e.deadline for g in self._groups.values()
-                         for e in g]
+            deadlines = [max(e.deadline, e.not_before)
+                         for g in self._groups.values() for e in g]
         return min(deadlines) if deadlines else None
 
     def poll(self, now: float | None = None, force: bool = False) -> int:
@@ -522,17 +681,49 @@ class AsyncRetrievalScheduler:
         """Drain: dispatch every pending request regardless of deadlines."""
         return self.poll(force=True)
 
+    def _expire_locked(self, now: float) -> int:
+        """Shed every queued entry whose deadline budget ran out: the
+        handle fails with :class:`DeadlineExceeded` and the entry never
+        occupies a batch slot. Called under the lock at pick time."""
+        expired = []
+        for gk in list(self._groups):
+            keep = [e for e in self._groups[gk] if e.expires > now]
+            if len(keep) != len(self._groups[gk]):
+                expired.extend(e for e in self._groups[gk]
+                               if e.expires <= now)
+                if keep:
+                    self._groups[gk] = keep
+                else:
+                    del self._groups[gk]
+        if expired:
+            self._counts["expired"] += len(expired)
+            for e in expired:
+                h = e.handle
+                h._fail(DeadlineExceeded(
+                    f"deadline of {h.deadline_ms}ms expired before "
+                    f"dispatch (route {h.route!r}, k-bucket "
+                    f"{h.k_bucket})"), t_done=now)
+            # expired rows free admission-queue space
+            self._cond.notify_all()
+        return len(expired)
+
     def _pick_batch(self, now: float, force: bool):
         """Pop one due micro-batch (whole requests, up to ``max_batch``
-        rows) under the lock; execution happens outside it."""
+        rows) under the lock; execution happens outside it. Entries in
+        retry backoff (``not_before`` in the future) are invisible
+        unless ``force`` drains them early; already-expired entries are
+        shed first and never picked."""
         with self._lock:
+            self._expire_locked(now)
             due_key = None
             due_deadline = math.inf
             for key, group in self._groups.items():
-                if not group:
+                eligible = (group if force
+                            else [e for e in group if e.not_before <= now])
+                if not eligible:
                     continue
-                rows = sum(e.rows for e in group)
-                oldest = min(e.deadline for e in group)
+                rows = sum(e.rows for e in eligible)
+                oldest = min(e.deadline for e in eligible)
                 if force or rows >= self.cfg.max_batch or oldest <= now:
                     if oldest < due_deadline:
                         due_key, due_deadline = key, oldest
@@ -546,9 +737,15 @@ class AsyncRetrievalScheduler:
                 self._aged_priority(e.priority, e.handle.t_submit, now),
                 e.seq))
             batch, rows = [], 0
-            while group and (not batch
-                             or rows + group[0].rows <= self.cfg.max_batch):
-                e = group.pop(0)
+            i = 0
+            while i < len(group):
+                e = group[i]
+                if not force and e.not_before > now:
+                    i += 1
+                    continue
+                if batch and rows + e.rows > self.cfg.max_batch:
+                    break
+                group.pop(i)
                 batch.append(e)
                 rows += e.rows
             if not group:
@@ -560,38 +757,81 @@ class AsyncRetrievalScheduler:
 
     def _execute(self, key: tuple, batch: list, *,
                  retrievers: dict | None = None,
-                 executor_id: int | None = None) -> int:
+                 executor_id: int | None = None,
+                 now: float | None = None) -> int:
         """Run one picked batch. ``retrievers`` lets an executor slot
         substitute its own replica map for the shared one; the pool tags
-        ``executor_id`` so per-executor batch/row counters aggregate in
-        ``stats()``."""
-        try:
-            return self._execute_inner(key, batch, retrievers=retrievers,
-                                       executor_id=executor_id)
-        except Exception as exc:
-            # the entries were already popped from their group — deliver
-            # the failure to every handle so no caller blocks forever,
-            # then re-raise (sync callers see it; the worker survives it)
-            t_done = time.perf_counter()
-            with self._cond:
-                self._counts["failed"] = (
-                    self._counts.get("failed", 0) + len(batch))
-                self._counts["in_flight"] -= len(batch)
-                for e in batch:
-                    e.handle._fail(exc, t_done)
-            raise
+        ``executor_id`` so per-executor batch/row counters (and the
+        health monitor) aggregate per slot. ``now`` pins the clock for
+        simulated-time tests (begin and completion share it)."""
+        token = self._begin_batch(key, batch, executor_id, now)
+        return self._run_attempt(token, retrievers=retrievers,
+                                 executor_id=executor_id, now=now)
 
-    def _execute_inner(self, key: tuple, batch: list, *,
-                       retrievers: dict | None = None,
-                       executor_id: int | None = None) -> int:
+    def _begin_batch(self, key: tuple, batch: list,
+                     executor_id: int | None,
+                     now: float | None = None) -> int:
+        """Register a picked batch as in flight: the token is what
+        retries, hedges, and first-result-wins delivery key on. The
+        record carries the min remaining deadline budget over its rows
+        (inf with no deadlines) — what an executor could use to skip
+        doomed work or size hedging."""
+        now = time.perf_counter() if now is None else now
+        budget = min((e.expires - now) * 1e3 for e in batch)
+        with self._lock:
+            token = next(self._inflight_seq)
+            self._inflight[token] = _Inflight(
+                token=token, key=key, batch=batch, t_start=now,
+                budget_ms=budget, executor_id=executor_id,
+                attempts=max(e.attempts for e in batch))
+        return token
+
+    def _run_attempt(self, token: int, *, retrievers: dict | None = None,
+                     executor_id: int | None = None,
+                     now: float | None = None) -> int:
+        """One execution attempt of an in-flight batch (the primary
+        pick, a retry, or a hedge). An attempt whose token is already
+        gone was cancelled at the queue — the race winner delivered
+        before this attempt started executing."""
+        t_start = time.perf_counter() if now is None else now
+        with self._lock:
+            rec = self._inflight.get(token)
+            if rec is None:
+                self._counts["hedges_cancelled"] += 1
+                return 0
+            key, batch = rec.key, rec.batch
         bucket, route_name, tf = key
-        if retrievers is None:
-            retr = self._retriever(route_name)
-        else:
-            retr = retrievers.get(route_name)
-            if retr is None:
-                retr = self._retriever(route_name).replicate()
-                retrievers[route_name] = retr
+        # degraded mode: while any breaker is not closed, a route with a
+        # fallback lane executes there (same padded width by policy
+        # validation) and the responses are flagged degraded
+        exec_route, degraded = route_name, False
+        if self.health.degraded():
+            fb = self.routing.by_name(route_name).fallback
+            if fb is not None:
+                exec_route, degraded = fb, True
+        delay_ms = 0.0
+        try:
+            retr, gen = self._resolve_retriever(exec_route, retrievers)
+            if self.faults is not None:
+                b_idx, g_idx = self._next_indices(executor_id)
+                delay_ms = self.faults.on_batch(
+                    executor_id=executor_id, batch_index=b_idx,
+                    global_index=g_idx, route=exec_route, generation=gen)
+            resp, n_real, n_pad = self._search_batch(retr, batch, tf)
+        except Exception as exc:
+            return self._attempt_failed(token, exc, executor_id, now)
+        t_done = time.perf_counter() if now is None else now
+        n = self._deliver(token, resp, n_real, n_pad, degraded=degraded,
+                          executor_id=executor_id, t_done=t_done)
+        if executor_id is not None and n:
+            # virtual fault delays count toward the EWMA/percentiles so
+            # simulated-clock tests exercise real health dynamics
+            self.health.record_success(
+                executor_id, (t_done - t_start) * 1e3 + delay_ms, t_done)
+        return n
+
+    def _search_batch(self, retr: Retriever, batch: list, tf):
+        """Concatenate + pad one batch to the static shape and run it."""
         terms = np.concatenate([e.terms for e in batch])
         qw_b = np.concatenate([e.qw_b for e in batch])
         qw_l = np.concatenate([e.qw_l for e in batch])
@@ -611,13 +851,29 @@ class AsyncRetrievalScheduler:
             ks = np.concatenate([ks, np.ones(n_pad, np.int32)])
         resp = retr.search(terms=terms, weights_b=qw_b, weights_l=qw_l,
                            k=ks, threshold_factor=tf)
-        t_done = time.perf_counter()
+        return resp, n_real, n_pad
+
+    def _deliver(self, token: int, resp: SearchResponse, n_real: int,
+                 n_pad: int, *, degraded: bool,
+                 executor_id: int | None, t_done: float) -> int:
+        """First result wins: pop the in-flight record and complete the
+        handles. A losing (hedged) attempt finds the record gone and its
+        result is discarded. Completion notifies the condition — blocked
+        submitters and deadline waiters wake immediately."""
         row0 = 0
         with self._cond:
+            rec = self._inflight.pop(token, None)
+            if rec is None:
+                self._counts["hedges_wasted"] += 1
+                return 0
+            batch = rec.batch
+            bucket, route_name, tf = rec.key
             self._counts["batches"] += 1
             self._counts["rows_executed"] += n_real
             self._counts["rows_padding"] += n_pad
             self._counts["in_flight"] -= len(batch)
+            if degraded:
+                self._counts["degraded_batches"] += 1
             gname = f"k{bucket}/{route_name}"
             self._group_batches[gname] = self._group_batches.get(gname, 0) + 1
             if executor_id is not None:
@@ -637,16 +893,203 @@ class AsyncRetrievalScheduler:
                     ids=resp.ids[rows, :k_e].copy(),
                     scores=resp.scores[rows, :k_e].copy(),
                     engine=resp.engine, k=k_e, k_exec=resp.k_exec,
-                    stats=self._slice_stats(resp.stats, rows, terms.shape[0]),
-                    latency_ms=resp.latency_ms, ks=e.ks)
-                if e.cache_key is not None:
-                    self._cache[e.cache_key] = self._detach(sliced)
-                    self._cache.move_to_end(e.cache_key)
+                    stats=self._slice_stats(resp.stats, rows,
+                                            n_real + n_pad),
+                    latency_ms=resp.latency_ms, ks=e.ks,
+                    generation=resp.generation, degraded=degraded)
+                # never cache a degraded (fallback-lane) response, nor
+                # one a concurrent hot-swap already obsoleted — a stale
+                # or approximate entry must not outlive the fault
+                if (e.cache_key is not None and not degraded
+                        and resp.generation == self._generation
+                        and self._cache_admit_locked(e.cache_key)):
+                    full = e.cache_key + (resp.generation,)
+                    self._cache[full] = (self._detach(sliced), t_done)
+                    self._cache.move_to_end(full)
                     while len(self._cache) > self.cfg.cache_size:
                         self._cache.popitem(last=False)
                 self._counts["completed"] += 1
                 e.handle._complete(sliced, t_done=t_done)
+            self._cond.notify_all()
         return len(batch)
+
+    def _cache_admit_locked(self, base_key: tuple) -> bool:
+        """Admission filter: "always" stores every response;
+        "second_sight" only stores keys seen before (the first sighting
+        goes on an LRU ghost list), keeping one-hit wonders from
+        displacing repeating queries."""
+        if self.cfg.cache_admission == "always":
+            return True
+        seen = base_key in self._cache_seen
+        self._cache_seen[base_key] = True
+        self._cache_seen.move_to_end(base_key)
+        while len(self._cache_seen) > max(8 * self.cfg.cache_size, 1024):
+            self._cache_seen.popitem(last=False)
+        if not seen:
+            self._counts["cache_admission_skips"] += 1
+        return seen
+
+    def _attempt_failed(self, token: int, exc: BaseException,
+                        executor_id: int | None,
+                        now: float | None = None) -> int:
+        """Resolve one failed attempt: absorb it while other attempts
+        of the batch are still racing, requeue the rows with backoff
+        when the route's retry policy covers the fault, else fail every
+        handle and re-raise (sync callers see the error; workers survive
+        it)."""
+        t_done = time.perf_counter() if now is None else now
+        if executor_id is not None:
+            self.health.record_failure(executor_id, t_done)
+        with self._cond:
+            rec = self._inflight.get(token)
+            if rec is None:
+                # the race winner already delivered; this loss is moot
+                self._counts["hedge_failures"] += 1
+                return 0
+            rec.outstanding -= 1
+            if rec.outstanding > 0:
+                # a hedge of this batch is still running — let it win
+                self._counts["hedge_failures"] += 1
+                return 0
+            del self._inflight[token]
+            batch = rec.batch
+            bucket, route_name, tf = rec.key
+            policy = self.routing.by_name(route_name).retry
+            if policy is None:
+                policy = self.cfg.retry
+            if (policy is not None and policy.retryable(exc)
+                    and rec.attempts < policy.max_attempts):
+                # requeue with deterministic seeded backoff; the entries
+                # become pick-eligible again at not_before
+                delay = policy.delay_ms(
+                    rec.attempts, token=min(e.seq for e in batch))
+                for e in batch:
+                    e.attempts = rec.attempts + 1
+                    e.not_before = t_done + delay / 1e3
+                self._groups.setdefault(rec.key, []).extend(batch)
+                self._counts["retries"] += 1
+                self._counts["in_flight"] -= len(batch)
+                self._cond.notify_all()
+                return 0
+            self._counts["failed"] += len(batch)
+            self._counts["in_flight"] -= len(batch)
+            for e in batch:
+                e.handle._fail(exc, t_done)
+            self._cond.notify_all()
+        raise exc
+
+    # -- hedging -------------------------------------------------------------
+
+    def hedge_due(self, now: float | None = None,
+                  exclude_executor: int | None = None) -> list:
+        """Mark straggler batches for hedged re-execution and return
+        their tokens. A batch qualifies once it has been in flight
+        longer than the hedge delay (``cfg.hedge_ms``, or the health
+        monitor's recent p99 under ``hedge_from_p99``) and has no hedge
+        yet. The caller runs ``_run_attempt(token, ...)`` for each
+        token on a *different* executor (``exclude_executor`` filters
+        out batches whose primary is the would-be hedger)."""
+        delay = self.cfg.hedge_ms
+        if self.cfg.hedge_from_p99:
+            delay = self.health.latency_p99_ms(default=self.cfg.hedge_ms)
+        if delay <= 0:
+            return []
+        now = time.perf_counter() if now is None else now
+        tokens = []
+        with self._lock:
+            for token, rec in self._inflight.items():
+                if rec.hedged:
+                    continue
+                if (exclude_executor is not None
+                        and rec.executor_id == exclude_executor):
+                    continue
+                if (now - rec.t_start) * 1e3 < delay:
+                    continue
+                rec.hedged = True
+                rec.outstanding += 1
+                self._counts["hedges"] += 1
+                tokens.append(token)
+        return tokens
+
+    # -- hot swap ------------------------------------------------------------
+
+    def swap_index(self, index, params: TwoLevelParams | None = None, *,
+                   warm: bool = True) -> int:
+        """Install a rebuilt index as a new generation behind a
+        two-phase gate. Phase 1 (no lock held, pool keeps serving):
+        open fresh retrievers for every route at the next generation
+        and warm them over the routing grid, so the flip never pays a
+        trace. Phase 2 (under the scheduler lock, between batches):
+        swap the masters, bump the generation, and purge every cache
+        entry of an older generation. Batches already in flight finish
+        on their old replica — their responses carry the old generation
+        stamp and are never cached. Executor replica maps rebuild
+        lazily on their next resolve. Returns the new generation."""
+        with self._open_lock:
+            params = self.params if params is None else params
+            next_gen = self._generation + 1
+            fresh = {}
+            for route in self.routing.all_routes:
+                fresh[route.name] = Retriever.open(
+                    index, params, engine=route.engine,
+                    k_buckets=self.k_buckets, generation=next_gen,
+                    **route.opts())
+            if warm:
+                buckets = (self.k_buckets if self.k_buckets
+                           else (resolve_k(params, None),))
+                for route, width, bucket in warmup_grid(
+                        self.routing, buckets, self.cfg.pad_terms):
+                    b = self.cfg.max_batch
+                    zero_w = np.zeros((b, width), np.float32)
+                    fresh[route.name].search(
+                        terms=np.zeros((b, width), np.int32),
+                        weights_b=zero_w, weights_l=zero_w,
+                        k=np.full(b, bucket, np.int32))
+            with self._cond:
+                self.index = index
+                self.params = params
+                self._policy_fp = self.routing.fingerprint(params)
+                self._retrievers = fresh
+                self._generation = next_gen
+                stale = [k for k in self._cache if k[-1] != next_gen]
+                for k in stale:
+                    del self._cache[k]
+                self._counts["cache_gen_evictions"] += len(stale)
+                self._counts["swaps"] += 1
+                self._cond.notify_all()
+        return next_gen
+
+    @property
+    def generation(self) -> int:
+        with self._lock:
+            return self._generation
+
+    # -- executor liveness ---------------------------------------------------
+
+    def _record_executor_death(self, executor_id: int | None,
+                               exc: BaseException) -> None:
+        """A worker thread died outside batch execution (batch failures
+        resolve their own handles; this path has no handle to fail).
+        The scheduler survives: the death is counted and surfaced in
+        ``stats()``, the executor's breaker goes terminally dead, and
+        waiters are notified so nothing blocks on the lost thread."""
+        with self._cond:
+            self._counts["executor_deaths"] += 1
+            self._dead_executors[-1 if executor_id is None
+                                 else executor_id] = repr(exc)
+            self._cond.notify_all()
+        if executor_id is not None:
+            self.health.mark_dead(executor_id)
+
+    def _next_indices(self, executor_id) -> tuple:
+        """(per-executor, global) batch-attempt ordinals for the fault
+        plan's positional matching."""
+        with self._lock:
+            g = self._fault_global
+            self._fault_global += 1
+            b = self._fault_per_exec.get(executor_id, 0)
+            self._fault_per_exec[executor_id] = b + 1
+        return b, g
 
     @staticmethod
     def _detach(resp: SearchResponse, **overrides) -> SearchResponse:
@@ -706,20 +1149,25 @@ class AsyncRetrievalScheduler:
         batch counts. The whole snapshot is read under the scheduler
         lock and returned as a detached dict (nested dicts copied), so
         a reader racing N executor threads sees one consistent moment:
-        ``submitted == completed + failed + shed + rejected + pending +
-        in_flight`` holds in every snapshot."""
+        ``submitted == completed + failed + shed + rejected + expired +
+        pending + in_flight`` holds in every snapshot."""
         with self._lock:
             counts = dict(self._counts)
-            return {**counts,
+            snap = {**counts,
                     "admitted": counts["submitted"] - counts["rejected"],
                     "warmup_s": self._warmup_s,
                     "cache_entries": len(self._cache),
                     "pending": sum(len(g) for g in self._groups.values()),
                     "pending_rows": self._pending_rows_locked(),
+                    "generation": self._generation,
+                    "dead_executors": dict(self._dead_executors),
                     "requests_by_route": dict(self._route_requests),
                     "batches_by_group": dict(self._group_batches),
                     "batches_by_executor": dict(self._executor_batches),
                     "rows_by_executor": dict(self._executor_rows)}
+        # the health monitor has its own (leaf) lock; read outside ours
+        snap["breakers"] = self.health.snapshot()
+        return snap
 
     def cache_clear(self) -> None:
         with self._lock:
@@ -775,11 +1223,22 @@ class AsyncRetrievalScheduler:
         self.close()
 
     def _worker(self) -> None:
+        try:
+            self._worker_loop()
+        except BaseException as exc:  # noqa: BLE001 — liveness accounting
+            # death outside batch execution (batch failures are handled
+            # inside poll): record it so stats tell the operator why
+            # the queue stopped draining, instead of silent stranding
+            self._record_executor_death(None, exc)
+
+    def _worker_loop(self) -> None:
         while True:
             with self._cond:
                 if self._stop:
                     return
-                deadlines = [min(e.deadline for e in g)
+                # an entry in retry backoff wakes the worker at
+                # not_before, not at its (possibly past) deadline
+                deadlines = [min(max(e.deadline, e.not_before) for e in g)
                              for g in self._groups.values() if g]
                 full = any(sum(e.rows for e in g) >= self.cfg.max_batch
                            for g in self._groups.values())
@@ -817,7 +1276,8 @@ def aggregate_latencies(latencies_ms, wall_s: float) -> dict:
 
 def mixed_request_stream(corpus, n: int, *, short_len: int = 3,
                          k_pool=(10, 100),
-                         query_pool: int | None = None) -> list:
+                         query_pool: int | None = None,
+                         deadline_ms: float | None = None) -> list:
     """Deterministic real-traffic-shaped demo stream over a synthetic
     corpus: alternate short (``short_len``-term) and full-length rows,
     cycle ``k`` through ``k_pool`` (mixed k-buckets in flight), and
@@ -834,7 +1294,8 @@ def mixed_request_stream(corpus, n: int, *, short_len: int = 3,
             terms=corpus.queries[qi, :qlen],
             weights_b=corpus.q_weights_b[qi, :qlen],
             weights_l=corpus.q_weights_l[qi, :qlen],
-            k=k_pool[(i // 2) % len(k_pool)]))
+            k=k_pool[(i // 2) % len(k_pool)],
+            deadline_ms=deadline_ms))
     return reqs
 
 
@@ -853,11 +1314,16 @@ def run_workload(scheduler: AsyncRetrievalScheduler,
     refused at admission (``SchedulerSaturated``) and load-shed victims
     are excluded from the latency aggregates but appear in the returned
     ``stats()`` counters. Returns latency aggregates plus
-    ``scheduler.stats()``.
+    ``scheduler.stats()``, and reports **goodput** next to QPS:
+    ``n_in_deadline`` / ``goodput_qps`` count only completions that met
+    their own ``deadline_ms`` (every completion, for deadline-free
+    requests) — the number that matters when expired work still burns
+    batch slots.
     """
     if not requests:
         return {"n": 0, "mrt_ms": math.nan, "p50_ms": math.nan,
                 "p99_ms": math.nan, "qps_achieved": 0.0,
+                "n_in_deadline": 0, "goodput_qps": 0.0,
                 **scheduler.stats()}
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / qps, len(requests)))
@@ -903,4 +1369,10 @@ def run_workload(scheduler: AsyncRetrievalScheduler,
                 pass  # failures/sheds surface via stats and are filtered
     wall = time.perf_counter() - t0
     served = [h.latency_ms for h in handles if h._exception is None]
-    return {**aggregate_latencies(served, wall), **scheduler.stats()}
+    n_good = sum(
+        1 for h in handles
+        if h._exception is None and math.isfinite(h.latency_ms)
+        and (h.deadline_ms is None or h.latency_ms <= h.deadline_ms))
+    return {**aggregate_latencies(served, wall),
+            "n_in_deadline": n_good, "goodput_qps": n_good / wall,
+            **scheduler.stats()}
