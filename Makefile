@@ -6,7 +6,7 @@ PYTEST  := PYTHONPATH=src $(PY) -m pytest -q
 
 .PHONY: test test-fast test-slow test-api test-serve test-faults \
     test-stress test-traversal \
-        test-quality test-index tier1 bench-smoke
+        test-quality test-index test-obs tier1 bench-smoke
 
 test: test-fast test-slow
 
@@ -68,6 +68,15 @@ test-quality:
 test-index:
 	$(PYTEST) -m "not slow" tests/test_index_codec.py \
 	    tests/test_compressed_index.py tests/test_builder.py
+
+# Observability lane: exact-rank quantiles + mergeable histograms, the
+# span tracer (simulated clocks, ring eviction, disabled-path overhead
+# guard), Prometheus/JSON export + the metrics HTTP server, the cost
+# model (monotonicity, predictor-vs-realized, cost-sorted dispatch
+# parity), and the BENCH-JSON non-finite guard (the quickest signal when
+# touching src/repro/obs/ or benchmarks/common.py).
+test-obs:
+	$(PYTEST) tests/test_obs.py
 
 # The exact tier-1 command from ROADMAP.md (everything, fail-fast).
 tier1:

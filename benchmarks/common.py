@@ -103,3 +103,49 @@ def emit(name: str, mrt_ms: float, derived: dict) -> str:
                   for k, v in derived.items())
     us = mrt_ms * 1e3 if mrt_ms == mrt_ms else float("nan")
     return f"{name},{us:.1f},{dv}"
+
+
+def check_finite(obj, path: str = "$") -> list[str]:
+    """Paths of every NaN/inf number in a JSON-able tree. A recorded
+    BENCH_*.json with a non-finite value means a lane silently failed —
+    the run harness fails loudly instead of committing it."""
+    bad = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            bad += check_finite(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            bad += check_finite(v, f"{path}[{i}]")
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        if not np.isfinite(obj):
+            bad.append(path)
+    return bad
+
+
+def write_bench_json(path, data: dict) -> None:
+    """The single BENCH_*.json writer: refuses non-finite values, then
+    writes deterministic (sorted, indented) JSON."""
+    import json
+    import pathlib
+    bad = check_finite(data)
+    if bad:
+        raise ValueError(
+            f"refusing to write {path}: non-finite values at "
+            f"{', '.join(bad[:10])}" + (" ..." if len(bad) > 10 else ""))
+    pathlib.Path(path).write_text(
+        json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+
+def validate_bench_files(root) -> dict:
+    """Scan every BENCH_*.json under ``root`` for non-finite values;
+    returns {filename: [bad paths]} for offenders (empty = clean)."""
+    import json
+    import pathlib
+    bad = {}
+    for p in sorted(pathlib.Path(root).glob("BENCH_*.json")):
+        paths = check_finite(json.loads(p.read_text()))
+        if paths:
+            bad[p.name] = paths
+    return bad

@@ -36,9 +36,9 @@ from repro.core.traversal import retrieve_batched
 from repro.data import StreamingIndexBuilder, synthetic_chunk_stream
 
 try:  # package-relative when driven by benchmarks.run
-    from .common import emit
+    from .common import emit, write_bench_json
 except ImportError:  # python -m benchmarks.million_doc
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_bench_json
 
 # Corpus shape tuned so per-(term, tile) runs are dense enough for
 # narrow gap widths (steep Zipf head): the regime where delta+int8
@@ -179,7 +179,7 @@ def main() -> None:
     path = pathlib.Path(args.out) if args.out else (
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_index.json")
     data = collect(_is_full(args.full))
-    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    write_bench_json(path, data)
     s, b, m = data["size"], data["build"], data["mrt"]
     print(f"{data['meta']['n_docs']} docs: {s['bytes_per_doc']}B/doc vs "
           f"fp32 {s['fp32_bytes_per_doc']}B/doc (ratio {s['ratio']:.3f}); "

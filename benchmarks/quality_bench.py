@@ -37,9 +37,9 @@ from repro.retrieval import Retriever
 from repro.retrieval.hybrid import dense_topk, embed_queries
 
 try:  # package-relative when driven by benchmarks.run
-    from .common import emit
+    from .common import emit, write_bench_json
 except ImportError:  # python -m benchmarks.quality_bench
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_bench_json
 
 N_DOCS = 4096
 N_TERMS = 1024
@@ -133,7 +133,7 @@ def main() -> None:
         pathlib.Path(__file__).resolve().parent.parent
         / "BENCH_quality.json")
     data = collect()
-    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    write_bench_json(path, data)
     for name, row in sorted(data["lanes"].items()):
         print(f"{name}: mrr@10={row['mrr@10']:.3f} "
               f"ndcg@10={row['ndcg@10']:.3f} "

@@ -14,18 +14,17 @@ is tiny and seeded, so numbers are stable enough to diff across PRs
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 
 from repro.core import build_index, twolevel
-from repro.core.metrics import mean_and_p99
 from repro.data import make_corpus
+from repro.obs import Histogram
 from repro.retrieval import Retriever
 
 try:  # package-relative when driven by benchmarks.run
-    from .common import emit
+    from .common import emit, write_bench_json
 except ImportError:  # python -m benchmarks.retrieval_smoke
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_bench_json
 
 N_DOCS = 4096
 N_TERMS = 1024
@@ -53,8 +52,13 @@ def collect() -> dict:
         seq = Retriever.open(index, params, engine="sequential",
                              k_buckets=None)
         resp = seq.search(**queries, k=K)
-        mrt, p99 = mean_and_p99(resp.latencies_ms)
-        row = {"mrt_ms": round(mrt, 3), "p99_ms": round(p99, 3),
+        # latency accounting through the obs histogram: mean is exact,
+        # p99 is exact-rank (max-clamped bucket edge) — a latency some
+        # query actually took, not numpy's interpolated percentile
+        hist = Histogram(name=f"latency_ms/{name}")
+        hist.record_many(resp.latencies_ms)
+        row = {"mrt_ms": round(hist.mean, 3),
+               "p99_ms": round(hist.quantile(0.99), 3),
                "tiles_visited": float(resp.stats["tiles_visited"].mean()),
                "n_tiles": float(resp.stats["n_tiles"].mean())}
         ck = Retriever.open(index, params, engine="batched",
@@ -69,7 +73,12 @@ def collect() -> dict:
     return {"meta": {"corpus": "splade_like", "n_docs": N_DOCS,
                      "n_terms": N_TERMS, "n_queries": N_QUERIES,
                      "tile_size": TILE, "k": K,
-                     "chunk_tiles": CHUNK_TILES},
+                     "chunk_tiles": CHUNK_TILES,
+                     # PR10: p99 moved from numpy's interpolated
+                     # percentile to obs.metrics exact-rank quantiles
+                     # (bucketed, max-clamped); expect small upward p99
+                     # shifts vs pre-PR10 recordings
+                     "quantiles": "exact_rank_bucketed"},
             "methods": methods}
 
 
@@ -89,7 +98,7 @@ def main() -> None:
         pathlib.Path(__file__).resolve().parent.parent
         / "BENCH_retrieval.json")
     data = collect()
-    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    write_bench_json(path, data)
     for name, row in data["methods"].items():
         frac = row["chunks_dispatched"] / max(row["n_chunks"], 1.0)
         print(f"{name}: mrt={row['mrt_ms']:.2f}ms "

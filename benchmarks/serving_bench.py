@@ -16,6 +16,20 @@ writes ``BENCH_serving.json`` (repo root by default):
   - ``routed_cached`` the same policy plus the LRU response cache (the
                       stream repeats queries, as real traffic does).
 
+then records the **cost-sorted dispatch lanes** (ROADMAP scheduler
+intelligence (a)): a traced run over a single chunked route fits an
+``obs.cost.CostModel`` from its own spans (query features -> realized
+``chunks_dispatched``), and the same stream then replays unsorted vs
+``sort_batches_by_cost=True`` — batches ordered by predicted chunk
+count so the while_loop's max-over-batch trip count hugs the mean.
+The lanes replay as a *burst* (every request queued up front) rather
+than Poisson arrivals: with a deep queue, dispatch order is the only
+lever, and Poisson sleep jitter (±15% MRT run-to-run at this
+saturation) would otherwise swamp the few-percent sorting effect.
+Per-query results are batch-composition independent (pinned by test),
+so the lanes differ only in latency. The fitted model's R² and the
+cost lanes' metrics-registry snapshots land in ``meta``;
+
 then sweeps the **executor pool** (1/2/4/8 workers, bounded admission
 with load-shedding and priority aging) over the same stream — the
 QPS-vs-executors curve — and finally records the **degraded-mode
@@ -41,21 +55,22 @@ exactly what the curve is for: like-for-like comparison across hosts.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import pathlib
 
 from repro.core import build_index, twolevel
 from repro.data import make_corpus
+from repro.obs import (CostModel, MetricsRegistry, Tracer,
+                       json_snapshot)
 from repro.serve import (AsyncRetrievalScheduler, Fault, FaultPlan,
                          HealthConfig, RetryPolicy, RoutingPolicy,
                          SchedulerConfig, mixed_request_stream, route,
                          run_workload, single_route, table8_policy)
 
 try:  # package-relative when driven by benchmarks.run
-    from .common import emit
+    from .common import emit, write_bench_json
 except ImportError:  # python -m benchmarks.serving_bench
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_bench_json
 
 N_DOCS = 4096
 N_TERMS = 1024
@@ -74,6 +89,8 @@ CONFIGS = (
     ("routed_cached", table8_policy, 256),
 )
 EXECUTOR_SWEEP = (1, 2, 4, 8)
+COST_CHUNK_TILES = 2   # fine exit grid: chunk count varies with query
+COST_QPS = 1e6         # burst replay: the whole stream queues up front
 ADMISSION_LIMIT = 8 * MAX_BATCH   # bounded queue: saturation sheds,
 ADMISSION_POLICY = "shed"         # so the median stays bounded and the
 AGING_MS = 50.0                   # tail (P99) absorbs the overload
@@ -104,6 +121,54 @@ def _requests(corpus, n: int) -> list:
                                 k_pool=K_POOL)
 
 
+def _cost_routing():
+    """One chunked route over the whole stream: short and long queries
+    share a group, so dispatch *order* is the only lever — exactly what
+    the cost-sorted lanes measure."""
+    return single_route("batched", traversal="chunked",
+                        chunk_tiles=COST_CHUNK_TILES)
+
+
+def _cost_dispatch(index, params, corpus):
+    """Fit a chunk-count model from a traced run, then replay the same
+    stream unsorted vs cost-sorted. Returns (model, lanes, obs
+    snapshots). The unsorted lane runs with no tracer and no sorting,
+    so it also pays no featurization — the honest control. Both lanes
+    replay the stream as a burst (``COST_QPS``): Poisson arrival jitter
+    at the saturating rate is larger than the sorting effect itself."""
+    tracer = Tracer(capacity=8192)
+    traced = AsyncRetrievalScheduler(
+        index, params,
+        SchedulerConfig(max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+                        cache_size=0, tracer=tracer),
+        routing=_cost_routing())
+    # this run also warms the chunked route's jit entries, so the timed
+    # lanes below never pay a trace
+    run_workload(traced, _requests(corpus, N_REQUESTS), qps=COST_QPS,
+                 seed=3)
+    model = CostModel.fit_from_traces(tracer.export())
+    lanes, snapshots = {}, {}
+    for lane, sort in (("unsorted", False), ("cost_sorted", True)):
+        registry = MetricsRegistry()
+        sched = AsyncRetrievalScheduler(
+            index, params,
+            SchedulerConfig(max_batch=MAX_BATCH,
+                            max_wait_ms=MAX_WAIT_MS, cache_size=0,
+                            metrics=registry,
+                            cost_model=model if sort else None,
+                            sort_batches_by_cost=sort),
+            routing=_cost_routing())
+        stats = run_workload(sched, _requests(corpus, N_REQUESTS),
+                             qps=COST_QPS, seed=3)
+        row = _row(stats, executors=0)
+        row["qps_offered"] = COST_QPS
+        row["queue_wait_ms"] = stats["queue_wait_ms"]
+        row["service_ms"] = stats["service_ms"]
+        lanes[lane] = row
+        snapshots[lane] = json_snapshot(registry)
+    return model, lanes, snapshots
+
+
 def collect() -> dict:
     corpus = make_corpus("splade_like", n_docs=N_DOCS, n_terms=N_TERMS,
                          n_queries=N_QUERIES, n_q_terms=12, seed=0)
@@ -124,6 +189,8 @@ def collect() -> dict:
         stats = run_workload(fresh(), _requests(corpus, N_REQUESTS),
                              qps=QPS, seed=3)
         configs[name] = _row(stats, executors=0)
+    cost_model, cost_lanes, cost_obs = _cost_dispatch(index, params,
+                                                      corpus)
     sweep = {}
     for n_exec in EXECUTOR_SWEEP:
         sched = AsyncRetrievalScheduler(
@@ -196,9 +263,32 @@ def collect() -> dict:
                                       "breaker opens, routes fall back), "
                                       "'healthy' is the control",
                      "p99_note": f"p99_ms over {N_REQUESTS} requests is a "
-                                 "true percentile (n >= 100)"},
-            "configs": configs, "executor_sweep": sweep,
-            "degraded_mode": degraded}
+                                 "true percentile (n >= 100); quantiles "
+                                 "are exact-rank (obs.metrics), not "
+                                 "interpolated — expect small upward "
+                                 "p99 shifts vs pre-PR10 recordings",
+                     "cost_model": {
+                         "features": list(cost_model.features),
+                         "weights": [round(float(w), 6)
+                                     for w in cost_model.weights],
+                         "intercept": round(float(cost_model.intercept),
+                                            6),
+                         "r2": round(float(cost_model.r2), 4),
+                         "n_samples": cost_model.n_samples},
+                     "cost_note": "cost_dispatch lanes replay the mixed "
+                                  "stream through one chunked route "
+                                  f"(chunk_tiles={COST_CHUNK_TILES}) as "
+                                  "a burst (dispatch order is the only "
+                                  "lever; Poisson jitter at QPS=100 "
+                                  "exceeds the sorting effect); "
+                                  "'cost_sorted' orders each picked "
+                                  "group by the trace-fitted chunk "
+                                  "predictor; ids/scores are "
+                                  "bit-identical across lanes by "
+                                  "batch-composition independence",
+                     "obs": cost_obs},
+            "configs": configs, "cost_dispatch": cost_lanes,
+            "executor_sweep": sweep, "degraded_mode": degraded}
 
 
 def _row(stats: dict, executors: int) -> dict:
@@ -228,6 +318,7 @@ def _row(stats: dict, executors: int) -> dict:
 def run(out) -> None:
     data = collect()
     rows = {**data["configs"],
+            **{f"cost/{k}": v for k, v in data["cost_dispatch"].items()},
             **{f"pool/{k}": v for k, v in data["executor_sweep"].items()},
             **{f"degraded_mode/{k}": v
                for k, v in data["degraded_mode"].items()}}
@@ -236,7 +327,8 @@ def run(out) -> None:
                  {k: v for k, v in row.items()
                   if k not in ("mrt_ms", "requests_by_route",
                                "batches_by_group", "batches_by_executor",
-                               "breakers")}))
+                               "breakers", "queue_wait_ms",
+                               "service_ms")}))
 
 
 def main() -> None:
@@ -248,7 +340,7 @@ def main() -> None:
         pathlib.Path(__file__).resolve().parent.parent
         / "BENCH_serving.json")
     data = collect()
-    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    write_bench_json(path, data)
     base = data["configs"]["baseline"]["mrt_ms"]
     for name, row in data["configs"].items():
         hits = row["cache_hits"]
@@ -257,6 +349,13 @@ def main() -> None:
               f"qps={row['qps_achieved']:6.1f} "
               f"cache={hits}/{hits + row['cache_misses']} "
               f"vs-baseline={row['mrt_ms'] / base:5.2f}x")
+    cm = data["meta"]["cost_model"]
+    print(f"cost model: r2={cm['r2']:.3f} n={cm['n_samples']} "
+          f"weights={cm['weights']}")
+    for name, row in data["cost_dispatch"].items():
+        print(f"cost/{name:11s} MRT={row['mrt_ms']:8.2f}ms "
+              f"P99={row['p99_ms']:8.2f}ms "
+              f"qps={row['qps_achieved']:6.1f}")
     for name, row in data["executor_sweep"].items():
         print(f"{name:14s} MRT={row['mrt_ms']:8.2f}ms "
               f"P99={row['p99_ms']:8.2f}ms "

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Fit the serving cost model (chunk-count predictor) from traces.
+
+    PYTHONPATH=src python scripts/fit_cost_model.py --traces spans.json
+    PYTHONPATH=src python scripts/fit_cost_model.py --synthetic
+
+Two sources:
+
+- ``--traces PATH``: a JSON list of span dicts — a saved
+  ``Tracer.export()``, or ``curl http://host:port/traces`` from a
+  ``--metrics-port`` serving process. Every span carrying both
+  ``cost_features`` and ``chunks_dispatched`` attributes is a sample.
+  This path is jax-free: fitting is pure numpy.
+- ``--synthetic``: build a seeded corpus in-process, serve a traced
+  mixed-length workload through one chunked route, and fit from those
+  spans (needs jax; what CI and a cold start use).
+
+Writes ``cost_model.json`` (``--out``) — loadable by
+``repro.obs.CostModel.load`` and ``repro-serve --cost-model`` — and
+prints the fit's R² over its training samples.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+
+def synthetic_spans(n_docs: int = 4096, n_terms: int = 1024,
+                    n_requests: int = 160, chunk_tiles: int = 2) -> list:
+    """Spans from a traced serving run over a seeded corpus: the same
+    single-chunked-route regime ``benchmarks/serving_bench.py``'s
+    cost_dispatch lanes use."""
+    from repro.core import build_index, twolevel
+    from repro.data import make_corpus
+    from repro.obs import Tracer
+    from repro.serve import (AsyncRetrievalScheduler, SchedulerConfig,
+                             mixed_request_stream, run_workload,
+                             single_route)
+    corpus = make_corpus("splade_like", n_docs=n_docs, n_terms=n_terms,
+                         n_queries=32, n_q_terms=12, seed=0)
+    index = build_index(corpus.merged("scaled"), tile_size=128)
+    params = twolevel.fast().replace(schedule="impact")
+    tracer = Tracer(capacity=8192)
+    sched = AsyncRetrievalScheduler(
+        index, params,
+        SchedulerConfig(max_batch=8, max_wait_ms=100.0, cache_size=0,
+                        tracer=tracer),
+        routing=single_route("batched", traversal="chunked",
+                             chunk_tiles=chunk_tiles))
+    run_workload(sched, mixed_request_stream(corpus, n_requests,
+                                             k_pool=(10, 100)),
+                 qps=100.0, seed=3)
+    return tracer.export()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--traces", metavar="PATH",
+                     help="JSON span list (Tracer.export() / GET /traces)")
+    src.add_argument("--synthetic", action="store_true",
+                     help="fit from a traced in-process workload on a "
+                          "seeded corpus")
+    ap.add_argument("--out", default="cost_model.json",
+                    help="model output path (default: ./cost_model.json)")
+    ap.add_argument("--l2", type=float, default=1e-3,
+                    help="ridge strength")
+    args = ap.parse_args()
+
+    from repro.obs import CostModel
+    if args.traces:
+        spans = json.loads(pathlib.Path(args.traces).read_text())
+        if not isinstance(spans, list):
+            raise SystemExit(f"{args.traces}: expected a JSON list of "
+                             f"span dicts, got {type(spans).__name__}")
+    else:
+        spans = synthetic_spans()
+    model = CostModel.fit_from_traces(spans, l2=args.l2)
+    model.save(args.out)
+    print(f"fit {model.n_samples} samples: r2={model.r2:.4f}")
+    for name, w in zip(model.features, model.weights):
+        print(f"  {name:10s} {float(w):.6f}")
+    print(f"intercept    {model.intercept:.6f}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

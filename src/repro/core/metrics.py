@@ -10,11 +10,15 @@ tests pin down:
 - ``k`` larger than the ranked list degrades gracefully;
 - ``mean_and_p99`` ignores non-finite latencies (in-flight NaN markers)
   and returns (nan, nan) for an empty or all-NaN sample instead of
-  raising.
+  raising. Its p99 is the **exact-rank** quantile (``repro.obs``), not
+  numpy's interpolated percentile — the reported tail is a latency some
+  query actually took.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from ..obs.metrics import exact_quantile
 
 
 def mrr_at_k(ranked_ids: np.ndarray, relevant: set[int], k: int = 10) -> float:
@@ -61,7 +65,7 @@ def mean_and_p99(latencies_ms: np.ndarray) -> tuple[float, float]:
     lat = lat[np.isfinite(lat)]
     if lat.size == 0:
         return (float("nan"), float("nan"))
-    return float(lat.mean()), float(np.percentile(lat, 99))
+    return float(lat.mean()), exact_quantile(lat, 0.99)
 
 
 def evaluate_run(ids: np.ndarray, qrels: list[set[int]], k: int,

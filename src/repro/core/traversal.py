@@ -61,6 +61,13 @@ _combine = combine
 STAT_KEYS = ("docs_present", "docs_survived", "docs_frozen",
              "postings_touched", "tiles_visited")
 
+# The per-query counters worth attaching to a request's execute span:
+# the executor stats plus the chunked traversal's dispatch counts
+# (absent from engines that don't produce them). Consumed by
+# ``repro.obs.trace_exec`` — keep in sync with retrieve_batched's stats
+# assembly below.
+TRACE_STAT_KEYS = STAT_KEYS + ("n_tiles", "chunks_dispatched", "n_chunks")
+
 
 @dataclasses.dataclass
 class RetrievalResult:

@@ -14,6 +14,14 @@ the printed stats). ``--shards N`` uses a one-axis mesh when N devices
 exist (``--host-devices`` fakes them on CPU), else the single-device
 vmap emulation path (bit-identical results).
 
+Observability: ``--metrics-port N`` serves the live registry over HTTP
+(``/metrics`` Prometheus text, ``/metrics.json``, ``/traces``; port 0
+binds an ephemeral port and prints it); ``--trace`` turns on
+per-request span recording and prints the slowest request's trace
+after the run; ``--cost-model PATH`` loads a fitted
+``obs.cost.CostModel`` (see ``scripts/fit_cost_model.py``) and enables
+cost-sorted batch dispatch.
+
 Heavy imports live inside ``main`` so ``cli`` (the ``repro-serve`` entry
 point) can fix up ``XLA_FLAGS`` before jax initializes.
 """
@@ -115,6 +123,17 @@ def main() -> None:
                     help="fake N host devices (must be set at launch)")
     ap.add_argument("--exchange-every", type=int, default=0,
                     help="all-gather global theta_Gl every E tiles")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus), /metrics.json "
+                         "and /traces on this port while the workload "
+                         "runs (0 = ephemeral, printed at startup)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request spans; the slowest "
+                         "request's trace prints after the run")
+    ap.add_argument("--cost-model", default=None, metavar="PATH",
+                    help="load a fitted obs.cost.CostModel (JSON from "
+                         "scripts/fit_cost_model.py) and sort batches "
+                         "by predicted chunk count")
     args = ap.parse_args()
     corpus = make_corpus(args.preset, n_docs=args.docs, n_terms=4096,
                          n_queries=64)
@@ -143,6 +162,15 @@ def main() -> None:
 
     retry = (RetryPolicy(max_attempts=args.retries)
              if args.retries > 1 else None)
+    from repro.obs import CostModel, MetricsRegistry, Tracer
+    tracer = Tracer() if args.trace else None
+    registry = MetricsRegistry()
+    cost_model = (CostModel.load(args.cost_model)
+                  if args.cost_model else None)
+    if cost_model is not None:
+        print(f"# cost model: {args.cost_model} "
+              f"(r2={cost_model.r2:.3f}, n={cost_model.n_samples}) — "
+              f"cost-sorted dispatch on")
     sched = AsyncRetrievalScheduler(
         index, params,
         SchedulerConfig(max_batch=args.max_batch, cache_size=args.cache,
@@ -150,8 +178,19 @@ def main() -> None:
                         admission_limit=args.admission_limit,
                         admission_policy=args.admission_policy,
                         aging_ms=args.aging_ms, retry=retry,
-                        hedge_ms=args.hedge),
+                        hedge_ms=args.hedge,
+                        tracer=tracer, metrics=registry,
+                        cost_model=cost_model,
+                        sort_batches_by_cost=cost_model is not None),
         routing=routing)
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        server = MetricsServer(registry, tracer,
+                               port=args.metrics_port,
+                               extra=sched.stats)
+        print(f"# metrics: http://127.0.0.1:{server.port}/metrics "
+              f"(.json, /traces)")
     rng = np.random.default_rng(0)
     k_pool = args.k_mix if args.k_mix else [args.k]
     reqs = [SearchRequest(terms=corpus.queries[i % 64],
@@ -182,6 +221,16 @@ def main() -> None:
     else:
         stats = run_workload(sched, reqs, qps=args.qps)
     print(stats)
+    if tracer is not None:
+        slow = tracer.slowest("request")
+        if slow is not None:
+            print(f"# slowest request (trace {slow}):")
+            for span in tracer.trace(slow):
+                print(f"#   {span['name']}: "
+                      f"{(span['t_end'] - span['t_start']) * 1e3:.2f}ms "
+                      f"{span['attrs']}")
+    if server is not None:
+        server.close()
 
 
 def cli() -> None:

@@ -7,8 +7,9 @@ from .faults import (Fault, FaultPlan, InjectedDeath,  # noqa: F401
 from .health import (BREAKER_CLOSED, BREAKER_DEAD,  # noqa: F401
                      BREAKER_HALF_OPEN, BREAKER_OPEN, HealthConfig,
                      HealthMonitor, RetryPolicy)
-from .router import (Route, RoutingPolicy, query_length, route,  # noqa: F401
-                     single_route, table8_policy, warmup_grid)
+from .router import (Route, RoutingPolicy, policy_summary,  # noqa: F401
+                     query_length, route, single_route, table8_policy,
+                     warmup_grid)
 from .scheduler import (ADMISSION_POLICIES,  # noqa: F401
                         CACHE_ADMISSIONS, AsyncRetrievalScheduler,
                         DeadlineExceeded, SchedulerConfig,

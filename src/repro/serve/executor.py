@@ -198,6 +198,7 @@ class ExecutorPool:
                                    time.perf_counter())
                     sched._cond.wait(timeout=max(wait, 1e-3))
                 continue
+            t_exec = time.perf_counter()
             try:
                 sched._execute(*picked, retrievers=retrievers,
                                executor_id=slot)
@@ -205,3 +206,9 @@ class ExecutorPool:
                 # the batch's handles were already failed by _execute;
                 # this executor must keep serving everyone else
                 pass
+            finally:
+                # wall time this slot spent executing (success or not) —
+                # the per-executor utilization signal next to the
+                # scheduler's delivery-side batch_service_ms
+                sched.metrics.histogram("executor_service_ms").record(
+                    (time.perf_counter() - t_exec) * 1e3)

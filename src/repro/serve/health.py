@@ -36,6 +36,8 @@ from collections import deque
 
 import numpy as np
 
+from ..obs.metrics import exact_quantile
+
 BREAKER_CLOSED = "closed"
 BREAKER_OPEN = "open"
 BREAKER_HALF_OPEN = "half_open"
@@ -220,11 +222,12 @@ class HealthMonitor:
 
     def latency_p99_ms(self, default: float = 0.0) -> float:
         """P99 over the recent-latency window (across executors), or
-        ``default`` with no samples — the hedge-delay source."""
+        ``default`` with no samples — the hedge-delay source. Exact-rank
+        (a latency an attempt actually took), not interpolated."""
         with self._lock:
             if not self._latencies:
                 return default
-            return float(np.percentile(np.asarray(self._latencies), 99))
+            return exact_quantile(self._latencies, 0.99)
 
     # -- introspection -------------------------------------------------------
 

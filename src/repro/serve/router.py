@@ -184,6 +184,25 @@ def query_length(weights_b, weights_l) -> int:
     return int(((wb != 0) | (wl != 0)).sum())
 
 
+def policy_summary(policy: RoutingPolicy) -> dict:
+    """A JSON-able description of a routing policy — what the metrics
+    endpoint and bench meta embed so a recorded run says which lanes it
+    ran. Non-JSON engine opt values (retry policies, callables) render
+    as ``repr``."""
+    def _jsonable(v):
+        return v if isinstance(v, (str, int, float, bool,
+                                   type(None))) else repr(v)
+
+    def _route(r: Route) -> dict:
+        return {"max_query_len": r.max_query_len, "engine": r.engine,
+                "opts": {k: _jsonable(v) for k, v in r.opts().items()},
+                "pad_terms": r.pad_terms, "fallback": r.fallback}
+
+    return {"routes": {r.name: _route(r) for r in policy.routes},
+            "fallback_routes": {r.name: _route(r)
+                                for r in policy.fallback_routes}}
+
+
 def single_route(engine: str = "batched", **engine_opts) -> RoutingPolicy:
     """The no-routing policy: one catch-all class (what the deprecated
     ``RetrievalServer`` shim uses)."""

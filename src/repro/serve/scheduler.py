@@ -52,6 +52,23 @@ a ``fallback`` lane execute there with responses flagged
 batches); cache keys carry the generation, so a rebuild can never
 serve stale hits.
 
+Observability (``repro.obs``): the scheduler always owns a
+:class:`~repro.obs.metrics.MetricsRegistry` (queue-wait and batch
+service-time histograms feed the ``queue_wait_ms`` percentiles in
+``stats()``), and — when ``SchedulerConfig.tracer`` carries a real
+:class:`~repro.obs.spans.Tracer` — records one trace per request
+(admission -> queue -> execute spans, with the batch token, executor
+id and the traversal's ``chunks_dispatched`` attached), emitted
+retroactively at delivery so in-flight requests hold timestamps, not
+span objects. With the default no-op tracer the whole path is a single
+attribute check. ``sort_batches_by_cost`` orders each picked group by
+a trace-fitted chunk-count prediction
+(:class:`~repro.obs.cost.CostModel`) within an aged-priority level, so
+micro-batches cluster similar-cost requests and the chunked
+while_loop's max-over-batch trip count hugs the mean; per-query
+results are independent of batch composition, so cost-sorted dispatch
+is bit-identical to unsorted (pinned by test).
+
 Two drive modes:
 
   - synchronous: ``poll()`` dispatches every *due* micro-batch inline
@@ -75,6 +92,9 @@ from collections import OrderedDict
 import numpy as np
 
 from ..core.twolevel import TwoLevelParams, resolve_k
+from ..obs.cost import CostModel, QueryFeaturizer
+from ..obs.metrics import Histogram, MetricsRegistry, exact_quantile
+from ..obs.spans import NULL_TRACER
 from ..retrieval import (K_BUCKETS, Retriever, SearchRequest,
                          SearchResponse, bucket_k, resolve_ks)
 from .health import HealthConfig, HealthMonitor, RetryPolicy
@@ -163,6 +183,22 @@ class SchedulerConfig:
     # "always" caches every response; "second_sight" only admits a key
     # seen before (one-hit wonders never displace a repeating query)
     cache_admission: str = "always"
+    # -- observability (repro.obs) -------------------------------------------
+    # tracer for per-request spans (admission -> queue -> execute);
+    # None = the shared no-op tracer, whose entire cost on the serving
+    # path is one attribute check per delivery
+    tracer: object | None = None
+    # metrics registry (queue-wait / service-time histograms, stats()
+    # percentiles); None = a private registry per scheduler
+    metrics: MetricsRegistry | None = None
+    # trace-fitted chunk-count predictor (obs.cost.CostModel). With
+    # sort_batches_by_cost, each picked group orders by predicted cost
+    # *within* an aged-priority level, clustering similar-cost requests
+    # per micro-batch so the chunked while_loop's max-over-batch trip
+    # count hugs the mean. Per-query results are batch-composition
+    # independent, so dispatch order never changes ids/scores.
+    cost_model: CostModel | None = None
+    sort_batches_by_cost: bool = False
 
 
 def truncate_terms(terms, qw_b, qw_l, pad_terms: int,
@@ -273,6 +309,8 @@ class _Pending:
     expires: float = math.inf  # absolute deadline_ms expiry; shed after
     not_before: float = -math.inf  # retry backoff: ineligible until then
     attempts: int = 1          # execution attempts including the next one
+    cost: float = 0.0          # predicted chunk count (cost-sorted pick)
+    features: tuple | None = None  # heaviest row's cost features (tracing)
 
     @property
     def rows(self) -> int:
@@ -324,6 +362,20 @@ class AsyncRetrievalScheduler:
         if self.cfg.executors < 0:
             raise ValueError(f"executors must be >= 0, "
                              f"got {self.cfg.executors}")
+        if self.cfg.sort_batches_by_cost and self.cfg.cost_model is None:
+            raise ValueError("sort_batches_by_cost=True requires a "
+                             "cost_model (fit one with "
+                             "scripts/fit_cost_model.py or "
+                             "obs.cost.CostModel.fit_from_traces)")
+        self.tracer = (self.cfg.tracer if self.cfg.tracer is not None
+                       else NULL_TRACER)
+        self.metrics = (self.cfg.metrics if self.cfg.metrics is not None
+                        else MetricsRegistry())
+        self._hist_queue = self.metrics.histogram("queue_wait_ms")
+        self._hist_service = self.metrics.histogram("batch_service_ms")
+        # lazily-built query featurizer (needs only index stats arrays);
+        # invalidated by swap_index so features track the live index
+        self._featurizer: QueryFeaturizer | None = None
         self._policy_fp = self.routing.fingerprint(self.params)
         self._retrievers: dict[str, Retriever] = {}
         # (bucket, route_name, threshold_factor) -> list of _Pending
@@ -450,17 +502,40 @@ class AsyncRetrievalScheduler:
                     self._counts["completed"] += 1
                     handle._complete(self._detach(hit, latency_ms=0.0),
                                      t_done=now, cached=True)
+                    if self.tracer.enabled:
+                        self.tracer.emit(
+                            "request", now, now, trace_id=next(self._seq),
+                            route=route.name, k_bucket=bucket,
+                            priority=priority, rows=q_terms.shape[0],
+                            cached=True, outcome="cached")
                     return handle
                 self._counts["cache_misses"] += 1
         expires = (math.inf if request.deadline_ms is None
                    else now + request.deadline_ms / 1e3)
+        cost_pred, feats = 0.0, None
+        if self.cfg.sort_batches_by_cost or self.tracer.enabled:
+            F = self._featurize(q_terms, qw_b, qw_l)
+            # a multi-row request rides one batch slot; its heaviest row
+            # (by upper-bound mass) is the one that paces the while_loop
+            heavy = F[int(np.argmax(F[:, 1]))]
+            feats = tuple(float(x) for x in heavy)
+            if self.cfg.cost_model is not None:
+                cost_pred = float(self.cfg.cost_model.predict(F).max())
         entry = _Pending(
             seq=next(self._seq), priority=priority,
             deadline=min(now + self.cfg.max_wait_ms / 1e3, expires),
             handle=handle, terms=q_terms, qw_b=qw_b, qw_l=qw_l, ks=ks,
-            cache_key=key, expires=expires)
+            cache_key=key, expires=expires, cost=cost_pred,
+            features=feats)
         self._admit(entry, (bucket, route.name, tf), now)
         return handle
+
+    def _featurize(self, terms, qw_b, qw_l) -> np.ndarray:
+        f = self._featurizer
+        if f is None:
+            f = QueryFeaturizer(self.index, self.params)
+            self._featurizer = f
+        return f(terms, qw_b, qw_l)
 
     def _cache_lookup_locked(self, base_key: tuple, now: float):
         """Current-generation cache hit for ``base_key``, honoring TTL
@@ -703,6 +778,13 @@ class AsyncRetrievalScheduler:
                     f"deadline of {h.deadline_ms}ms expired before "
                     f"dispatch (route {h.route!r}, k-bucket "
                     f"{h.k_bucket})"), t_done=now)
+                if self.tracer.enabled:
+                    self.tracer.emit(
+                        "request", h.t_submit, now, trace_id=e.seq,
+                        route=h.route, k_bucket=h.k_bucket,
+                        priority=e.priority, rows=e.rows,
+                        outcome="expired",
+                        deadline_ms=h.deadline_ms)
             # expired rows free admission-queue space
             self._cond.notify_all()
         return len(expired)
@@ -732,10 +814,20 @@ class AsyncRetrievalScheduler:
             group = self._groups[due_key]
             # aged priority decides dispatch order *at pick time* (a
             # static heap order could not model aging); FIFO within a
-            # level via seq
-            group.sort(key=lambda e: (
-                self._aged_priority(e.priority, e.handle.t_submit, now),
-                e.seq))
+            # level via seq. With sort_batches_by_cost, predicted chunk
+            # count breaks ties within a priority level, so consecutive
+            # micro-batches carry similar-cost rows and the while_loop's
+            # max-over-batch trip count stays near the batch mean.
+            if self.cfg.sort_batches_by_cost:
+                group.sort(key=lambda e: (
+                    self._aged_priority(e.priority, e.handle.t_submit,
+                                        now),
+                    e.cost, e.seq))
+            else:
+                group.sort(key=lambda e: (
+                    self._aged_priority(e.priority, e.handle.t_submit,
+                                        now),
+                    e.seq))
             batch, rows = [], 0
             i = 0
             while i < len(group):
@@ -881,6 +973,17 @@ class AsyncRetrievalScheduler:
                     self._executor_batches.get(executor_id, 0) + 1)
                 self._executor_rows[executor_id] = (
                     self._executor_rows.get(executor_id, 0) + n_real)
+            service_ms = max((t_done - rec.t_start) * 1e3, 0.0)
+            self._hist_service.record(service_ms)
+            tracing = self.tracer.enabled
+            if tracing:
+                self.tracer.emit(
+                    "batch", rec.t_start, t_done,
+                    trace_id=f"batch-{rec.token}", batch=rec.token,
+                    route=route_name, k_bucket=bucket, rows=n_real,
+                    padding=n_pad, attempts=rec.attempts,
+                    degraded=degraded,
+                    executor=-1 if executor_id is None else executor_id)
             for e in batch:
                 rows = slice(row0, row0 + e.rows)
                 row0 += e.rows
@@ -910,8 +1013,44 @@ class AsyncRetrievalScheduler:
                         self._cache.popitem(last=False)
                 self._counts["completed"] += 1
                 e.handle._complete(sliced, t_done=t_done)
+                self._hist_queue.record(
+                    max((rec.t_start - e.handle.t_submit) * 1e3, 0.0))
+                if tracing:
+                    self._trace_request(rec, e, sliced, t_done,
+                                        degraded, executor_id)
             self._cond.notify_all()
         return len(batch)
+
+    def _trace_request(self, rec: _Inflight, e: _Pending,
+                       sliced: SearchResponse, t_done: float,
+                       degraded: bool, executor_id: int | None) -> None:
+        """Emit one request's trace at delivery: a root ``request`` span
+        with ``queue`` and ``execute`` children. Spans are emitted
+        retroactively from the timestamps the scheduler already carries
+        (handle.t_submit, the in-flight record's t_start, t_done), so
+        tracing never adds state to the hot path. The execute span gets
+        the traversal's per-query counters (``chunks_dispatched`` et
+        al.) plus the cost-model features/prediction when present."""
+        from ..obs import trace_exec  # imports jax via core.traversal
+        t_sub = e.handle.t_submit
+        root = self.tracer.emit(
+            "request", t_sub, t_done, trace_id=e.seq,
+            route=e.handle.route, k_bucket=e.handle.k_bucket,
+            priority=e.priority, rows=e.rows, attempts=rec.attempts,
+            degraded=degraded, outcome="completed")
+        self.tracer.emit(
+            "queue", t_sub, rec.t_start, trace_id=e.seq, parent=root,
+            queue_wait_ms=float(max((rec.t_start - t_sub) * 1e3, 0.0)))
+        attrs = trace_exec.request_attributes(sliced.stats)
+        if e.features is not None:
+            attrs["cost_features"] = list(e.features)
+            if e.cost:
+                attrs["cost_pred"] = e.cost
+        self.tracer.emit(
+            "execute", rec.t_start, t_done, trace_id=e.seq, parent=root,
+            batch=rec.token, budget_ms=rec.budget_ms,
+            executor=-1 if executor_id is None else executor_id,
+            **attrs)
 
     def _cache_admit_locked(self, base_key: tuple) -> bool:
         """Admission filter: "always" stores every response;
@@ -1051,6 +1190,9 @@ class AsyncRetrievalScheduler:
                 self._policy_fp = self.routing.fingerprint(params)
                 self._retrievers = fresh
                 self._generation = next_gen
+                # cost features are index-derived; refit lazily on the
+                # new generation's stats arrays
+                self._featurizer = None
                 stale = [k for k in self._cache if k[-1] != next_gen]
                 for k in stale:
                     del self._cache[k]
@@ -1167,6 +1309,11 @@ class AsyncRetrievalScheduler:
                     "rows_by_executor": dict(self._executor_rows)}
         # the health monitor has its own (leaf) lock; read outside ours
         snap["breakers"] = self.health.snapshot()
+        # histograms carry their own (leaf) locks too: pick-to-submit
+        # queue wait and batch service time as exact-rank-at-bucket
+        # summaries ({"n": 0} before any delivery — never NaN)
+        snap["queue_wait_ms"] = self._hist_queue.summary()
+        snap["service_ms"] = self._hist_service.summary()
         return snap
 
     def cache_clear(self) -> None:
@@ -1257,20 +1404,28 @@ class AsyncRetrievalScheduler:
                 pass
 
 
-def aggregate_latencies(latencies_ms, wall_s: float) -> dict:
+def aggregate_latencies(latencies_ms, wall_s: float,
+                        histogram: Histogram | None = None) -> dict:
     """MRT/P50/P99/QPS over a served workload's per-request latencies —
     the single copy of the serving latency accounting (the scheduler's
-    ``run_workload`` and the deprecated server shim both use it). NaN
-    entries (in-flight requests) are dropped and zero-service cache
-    completions clamp at 0, so neither poisons the aggregates."""
+    ``run_workload``, the deprecated server shim, and the serving bench
+    all use it). NaN entries (in-flight requests) are dropped and
+    zero-service cache completions clamp at 0, so neither poisons the
+    aggregates. Quantiles are **exact-rank** (``obs.metrics``), not
+    numpy's interpolated percentiles: the reported p99 is a latency
+    some request actually experienced. Passing ``histogram`` also folds
+    the samples into a registry histogram (the bench's mergeable
+    export)."""
     lat = np.asarray(latencies_ms, np.float64)
     lat = np.clip(lat[np.isfinite(lat)], 0.0, None)
+    if histogram is not None:
+        histogram.record_many(lat)
     if lat.size == 0:
         return {"n": 0, "mrt_ms": math.nan, "p50_ms": math.nan,
                 "p99_ms": math.nan, "qps_achieved": 0.0}
     return {"n": int(lat.size), "mrt_ms": float(lat.mean()),
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
+            "p50_ms": exact_quantile(lat, 0.50),
+            "p99_ms": exact_quantile(lat, 0.99),
             "qps_achieved": lat.size / wall_s}
 
 

@@ -263,8 +263,8 @@ def test_health_ewma_and_p99():
     hm.record_success(0, 100.0, now=0.0)
     hm.record_success(0, 50.0, now=0.1)
     assert hm.snapshot()[0]["ewma_ms"] == pytest.approx(80.0)
-    assert hm.latency_p99_ms() == pytest.approx(
-        float(np.percentile([100.0, 50.0], 99)))
+    # exact-rank p99 over {100, 50}: the max sample, not interpolated
+    assert hm.latency_p99_ms() == pytest.approx(100.0)
     assert HealthMonitor().latency_p99_ms(default=7.0) == 7.0
 
 

@@ -125,10 +125,11 @@ def test_mean_and_p99_guards():
     assert np.isnan(mean) and np.isnan(p99)
     mean, p99 = mean_and_p99(np.array([np.nan, np.nan]))
     assert np.isnan(mean) and np.isnan(p99)
-    # non-finite entries are dropped, not averaged in
+    # non-finite entries are dropped, not averaged in; p99 is the
+    # exact-rank quantile (a latency some query took), not interpolated
     mean, p99 = mean_and_p99(np.array([1.0, np.nan, 3.0, np.inf]))
     assert mean == pytest.approx(2.0)
-    assert p99 == pytest.approx(np.percentile([1.0, 3.0], 99))
+    assert p99 == pytest.approx(3.0)
     mean, p99 = mean_and_p99(np.array([5.0]))
     assert mean == 5.0 and p99 == 5.0
 
